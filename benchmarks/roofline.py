@@ -1,0 +1,197 @@
+"""Roofline analysis from the dry-run artifacts (deliverable g).
+
+Hardware model: TPU v5e — 197 TFLOP/s bf16 per chip, 819 GB/s HBM,
+~50 GB/s/link ICI.  The compiled HLO is the per-device (SPMD) module,
+so ``cost_analysis()`` FLOPs/bytes and the collective census are
+already per-chip quantities:
+
+    compute term    = flops_per_device / PEAK_FLOPS
+    memory term     = bytes_per_device / HBM_BW
+    collective term = collective_bytes_per_device / ICI_BW
+
+MODEL_FLOPS uses the classic estimate 6*N*D for training (2*N*D for
+forward-only), with N_active for MoE, D = tokens processed.  The ratio
+MODEL_FLOPS / (HLO_FLOPs * chips) flags remat/redundancy waste — note
+XLA's cost model counts a fused multiply-add as one op on some paths,
+so treat the ratio as a consistency signal, not an absolute MFU.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+from dataclasses import dataclass
+
+PEAK_FLOPS = 197e12       # bf16 per chip
+HBM_BW = 819e9            # bytes/s per chip
+ICI_BW = 50e9             # bytes/s per link
+
+SHAPE_TOKENS = {
+    "train_4k": (4096, 256, "train"),
+    "prefill_32k": (32768, 32, "prefill"),
+    "decode_32k": (32768, 128, "decode"),
+    "long_500k": (524288, 1, "decode"),
+}
+
+
+@dataclass
+class RooflineRow:
+    arch: str
+    shape: str
+    mesh: str
+    coded: bool
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    model_flops: float
+    hlo_flops_total: float
+    ratio: float
+    note: str = ""
+
+    @property
+    def step_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+
+def model_flops(record: dict) -> float:
+    seq, batch, mode = SHAPE_TOKENS[record["shape"]]
+    n_params = record.get(
+        "active_param_count" if _is_moe(record["arch"]) else "param_count", 0
+    )
+    if mode == "train":
+        toks = seq * batch
+        flops = 6.0 * n_params * toks
+        coded = record.get("coded")
+        if coded:
+            if coded == "msgc":
+                flops *= 2  # lambda=n M-SGC: load 2/n (Remark 3.3)
+            else:
+                # GC replication: each token's gradient work is done
+                # s+1 times at load (s+1)/n = 0.0625 (Table-1 point)
+                n = 256 if record["mesh"] == "16x16" else 512
+                s = max(1, round(0.0625 * n) - 1)
+                flops *= (s + 1)
+        return flops
+    if mode == "prefill":
+        return 2.0 * n_params * seq * batch
+    return 2.0 * n_params * batch  # decode: one token per sequence
+
+
+def _is_moe(arch: str) -> bool:
+    return arch in ("mixtral-8x22b", "qwen2-moe-a2.7b")
+
+
+def analyze_record(record: dict) -> RooflineRow | None:
+    if record.get("status") != "ok":
+        return None
+    ndev = record["num_devices"]
+    flops_dev = float(record.get("flops_per_device") or 0.0)
+    # memory term: the compiled (post-fusion) per-device bytes count the
+    # scan body once; correct by the measured flops trip ratio (loop
+    # bodies dominate both, so byte/flop ratios track each other).
+    bytes_scanned = float(record.get("bytes_per_device_scanned") or 0.0)
+    flops_scanned = float(record.get("flops_per_device_scanned") or 0.0)
+    trip_ratio = (
+        max(flops_dev / flops_scanned, 1.0) if flops_scanned else 1.0
+    )
+    bytes_dev = bytes_scanned * trip_ratio if bytes_scanned else float(
+        record.get("bytes_per_device") or 0.0
+    )
+    coll_dev = float(record.get("collectives", {}).get("total_bytes", 0))
+    compute_s = flops_dev / PEAK_FLOPS
+    memory_s = bytes_dev / HBM_BW
+    collective_s = coll_dev / ICI_BW
+    terms = {
+        "compute": compute_s,
+        "memory": memory_s,
+        "collective": collective_s,
+    }
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(record)
+    hlo_total = flops_dev * ndev
+    return RooflineRow(
+        arch=record["arch"],
+        shape=record["shape"],
+        mesh=record["mesh"],
+        coded=bool(record.get("coded")),
+        compute_s=compute_s,
+        memory_s=memory_s,
+        collective_s=collective_s,
+        dominant=dominant,
+        model_flops=mf,
+        hlo_flops_total=hlo_total,
+        ratio=mf / hlo_total if hlo_total else float("nan"),
+    )
+
+
+def load_records(dryrun_dir: str) -> list[dict]:
+    out = []
+    for path in sorted(glob.glob(os.path.join(dryrun_dir, "*.json"))):
+        with open(path) as f:
+            out.append(json.load(f))
+    return out
+
+
+def roofline_table(dryrun_dir: str = "experiments/dryrun") -> list[RooflineRow]:
+    rows = []
+    for rec in load_records(dryrun_dir):
+        row = analyze_record(rec)
+        if row:
+            rows.append(row)
+    return rows
+
+
+def format_table(rows: list[RooflineRow]) -> str:
+    hdr = (
+        f"{'arch':16s} {'shape':12s} {'mesh':8s} {'coded':5s} "
+        f"{'compute_s':>10s} {'memory_s':>10s} {'collect_s':>10s} "
+        f"{'dominant':>10s} {'useful/HLO':>10s}"
+    )
+    lines = [hdr, "-" * len(hdr)]
+    for r in rows:
+        lines.append(
+            f"{r.arch:16s} {r.shape:12s} {r.mesh:8s} {str(r.coded):5s} "
+            f"{r.compute_s:10.3e} {r.memory_s:10.3e} {r.collective_s:10.3e} "
+            f"{r.dominant:>10s} {r.ratio:10.2f}"
+        )
+    return "\n".join(lines)
+
+
+def main() -> None:
+    rows = roofline_table()
+    print(format_table(rows))
+    os.makedirs("experiments", exist_ok=True)
+    with open("experiments/roofline.csv", "w") as f:
+        f.write(
+            "arch,shape,mesh,coded,compute_s,memory_s,collective_s,"
+            "dominant,model_flops,hlo_flops_total,ratio\n"
+        )
+        for r in rows:
+            f.write(
+                f"{r.arch},{r.shape},{r.mesh},{r.coded},{r.compute_s},"
+                f"{r.memory_s},{r.collective_s},{r.dominant},"
+                f"{r.model_flops},{r.hlo_flops_total},{r.ratio}\n"
+            )
+    print(f"\nwrote experiments/roofline.csv ({len(rows)} rows)")
+
+    # §Perf variants, if present
+    if os.path.isdir("experiments/perf"):
+        perf = []
+        for rec in load_records("experiments/perf"):
+            row = analyze_record(rec)
+            if row:
+                perf.append((rec.get("tag", ""), row))
+        if perf:
+            print("\n§Perf variants (experiments/perf):")
+            for tag, r in perf:
+                print(
+                    f"  {r.arch:14s} {r.shape:11s} {tag:14s} "
+                    f"compute {r.compute_s:9.3e} mem {r.memory_s:9.3e} "
+                    f"coll {r.collective_s:9.3e} bound {r.step_s:8.3f}s"
+                )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,359 @@
+"""Benchmark harness — one function per paper table / figure.
+
+Prints ``name,value,derived`` CSV lines per benchmark plus readable
+tables.  All experiments run against the Gilbert-Elliott straggler
+source calibrated to the paper's Fig. 1 profile (256 workers, ~5%
+straggler fraction, short bursts) since the AWS Lambda cluster is not
+reproducible offline; relative orderings are the reproduction target.
+
+  PYTHONPATH=src python -m benchmarks.run             # everything
+  PYTHONPATH=src python -m benchmarks.run table1       # one benchmark
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+
+import numpy as np
+
+from repro.core import (
+    GilbertElliotSource,
+    estimate_alpha,
+    load_gc,
+    load_m_sgc,
+    load_sr_sgc,
+    lower_bound_bursty,
+    make_scheme,
+    select_parameters,
+    simulate,
+)
+from repro.core.gc import GradientCode, RepGradientCode
+
+N_WORKERS = 256
+J_TOTAL = 480
+MU = 1.0
+SEED = 0
+
+# GE chain calibrated to Fig. 1: ~4-5% stragglers, short bursts (mean
+# ~1.2 rounds), heavy right tail on completion times.
+GE = dict(p_ns=0.035, p_sn=0.85, slow_factor=6.0, jitter=0.05)
+
+# Table-1 operating points.  The paper selects per-scheme parameters by
+# the App-J probe procedure on ITS cluster (B=1, W=2 for M-SGC there);
+# our GE chain has slightly longer bursts, so the same procedure picks
+# B=2, W=3 (see bench_table3_probe).  T = 3 <= M-1 still holds for the
+# M=4 interleaved models.
+PARAMS = {
+    "m-sgc": dict(B=2, W=3, lam=27),
+    "sr-sgc": dict(B=2, W=3, lam=23),
+    "gc": dict(s=15),
+    "uncoded": {},
+}
+
+
+def _source(seed=SEED, n=N_WORKERS):
+    return GilbertElliotSource(n=n, seed=seed, **GE)
+
+
+def bench_fig1_trace_stats():
+    """Fig. 1: straggler statistics of the (synthetic) worker profile."""
+    src = _source()
+    pat = src.sample_pattern(100)
+    frac = pat.mean()
+    bursts = []
+    for i in range(pat.shape[1]):
+        run = 0
+        for t in range(pat.shape[0]):
+            if pat[t, i]:
+                run += 1
+            elif run:
+                bursts.append(run)
+                run = 0
+        if run:
+            bursts.append(run)
+    bursts = np.asarray(bursts)
+    hist = {k: int((bursts == k).sum()) for k in range(1, 6)}
+    delays = src.sample_delays(100)
+    p50, p95, p99 = np.percentile(delays, [50, 95, 99])
+    print(f"fig1.straggler_fraction,{frac:.4f},")
+    print(f"fig1.burst_hist,{hist},")
+    print(f"fig1.completion_p50_p95_p99,{p50:.2f}/{p95:.2f}/{p99:.2f},"
+          "long right tail as in Fig. 1(c)")
+    assert bursts.mean() < 3.0, "bursts should be short (Fig. 1b)"
+
+
+def bench_fig16_load_runtime():
+    """Fig. 16: per-round time grows linearly with normalized load."""
+    src = _source()
+    delays = src.sample_delays(100)
+    alpha = estimate_alpha(src)
+    loads = [1 / N_WORKERS, 0.05, 0.1, 0.25, 0.5, 1.0]
+    times = [float(np.mean(delays + (L - 1 / N_WORKERS) * alpha)) for L in loads]
+    slope = np.polyfit(loads, times, 1)[0]
+    for L, t in zip(loads, times):
+        print(f"fig16.load_{L:.3f},{t:.3f},avg worker seconds")
+    print(f"fig16.slope,{slope:.3f},alpha (s per unit load)")
+
+
+def _run_scheme(name, J=J_TOTAL, seed=SEED, params=None):
+    params = params if params is not None else PARAMS[name]
+    sch = make_scheme(name, N_WORKERS, J, **params)
+    src = _source(seed)
+    delays = src.sample_delays(J + sch.T + 1)
+    res = simulate(sch, delays, mu=MU, alpha=estimate_alpha(src), J=J)
+    return sch, res
+
+
+def bench_table1_runtime(repeats: int = 3):
+    """Table 1: total runtime of M-SGC / SR-SGC / GC / uncoded, J=480."""
+    rows = []
+    for name in ("m-sgc", "sr-sgc", "gc", "uncoded"):
+        times = []
+        for r in range(repeats):
+            sch, res = _run_scheme(name, seed=SEED + r)
+            times.append(res.total_time)
+        mean, std = float(np.mean(times)), float(np.std(times))
+        rows.append((name, sch.normalized_load, mean, std))
+        print(f"table1.{name},{mean:.1f},load={sch.normalized_load:.4f} "
+              f"std={std:.1f}")
+    by = {r[0]: r[2] for r in rows}
+    gain = 1 - by["m-sgc"] / by["gc"]
+    print(f"table1.msgc_vs_gc_gain,{gain:.3f},paper reports 0.16")
+    assert by["m-sgc"] < by["sr-sgc"] < by["gc"] < by["uncoded"], (
+        "Table-1 ordering must hold: M-SGC < SR-SGC < GC < uncoded"
+    )
+
+
+def bench_table3_probe():
+    """Table 3: parameter selection vs probe length T_probe."""
+    src = _source(SEED + 100)
+    full = src.sample_delays(120)
+    for name in ("m-sgc", "sr-sgc", "gc"):
+        for t_probe in (10, 20, 40, 80):
+            cand = select_parameters(
+                name, N_WORKERS, full[:t_probe], mu=MU,
+                alpha=estimate_alpha(src),
+                grid=_small_grid(name),
+            )
+            sch, res = _run_scheme(name, J=120, seed=SEED + 1,
+                                   params=cand.params)
+            print(
+                f"table3.{name}.Tprobe{t_probe},{res.total_time:.1f},"
+                f"params={cand.params} load={cand.load:.4f}"
+            )
+
+
+def _small_grid(name):
+    if name == "gc":
+        return [{"s": s} for s in (4, 8, 12, 15, 20, 24)]
+    if name == "sr-sgc":
+        return [
+            {"B": B, "W": B + 1, "lam": lam}
+            for B in (1, 2) for lam in (8, 16, 23, 28)
+        ] + [{"B": 2, "W": 3, "lam": 23}]
+    return [
+        {"B": B, "W": W, "lam": lam}
+        for B, W in ((1, 2), (2, 3))
+        for lam in (8, 16, 24, 27, 32)
+    ]
+
+
+def bench_table4_decode():
+    """Table 4: master decode time (solve + combine) per scheme."""
+    rng = np.random.default_rng(0)
+    grad_dim = 120_000  # ~ the paper's CNN gradient size
+
+    def time_decode(code, survivors, parts, reps=5):
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            beta = code.decode_vector(survivors)
+            _ = beta[survivors] @ parts
+            code._decode_cache.clear() if hasattr(code, "_decode_cache") else None
+        return (time.perf_counter() - t0) / reps * 1e3
+
+    # GC s=15 -> GC-Rep (16 | 256); M-SGC lam=27 -> general code
+    rep = RepGradientCode(N_WORKERS, 15)
+    gen = GradientCode(N_WORKERS, 27, seed=0)
+    surv_rep = sorted(rng.choice(N_WORKERS, N_WORKERS - 10, replace=False).tolist())
+    surv_gen = sorted(rng.choice(N_WORKERS, N_WORKERS - 20, replace=False).tolist())
+    parts_rep = rng.standard_normal((len(surv_rep), grad_dim))
+    parts_gen = rng.standard_normal((len(surv_gen), grad_dim))
+    ms_rep = time_decode(rep, surv_rep, parts_rep)
+    ms_gen = time_decode(gen, surv_gen, parts_gen)
+    print(f"table4.gc_rep_decode_ms,{ms_rep:.1f},s=15 n=256 (GC-Rep App. G)")
+    print(f"table4.general_decode_ms,{ms_gen:.1f},lam=27 n=256 (M-SGC groups)")
+    print("table4.note,0,decode hidden in master idle time when M > T+1 (App. K)")
+
+
+def bench_fig2_progress():
+    """Fig. 2(a): jobs completed vs clock time."""
+    for name in ("m-sgc", "gc", "uncoded"):
+        sch, res = _run_scheme(name, J=120)
+        times = sorted(res.job_done_time.values())
+        q = [times[int(len(times) * f) - 1] for f in (0.25, 0.5, 0.75, 1.0)]
+        print(f"fig2.{name}.jobs_25_50_75_100pct,"
+              f"{q[0]:.0f}/{q[1]:.0f}/{q[2]:.0f}/{q[3]:.0f},seconds")
+
+
+def bench_fig11_load_bounds():
+    """Fig. 11: normalized loads vs the Thm-F.1 converse, n=20 B=3 lam=4."""
+    n, B, lam = 20, 3, 4
+    for W in (4, 7, 10, 13, 16):
+        m = load_m_sgc(n, B, W, lam)
+        lb = lower_bound_bursty(n, B, W, lam)
+        line = f"fig11.W{W},{m:.4f},bound={lb:.4f}"
+        if (W - 1) % B == 0:
+            line += f" srsgc={load_sr_sgc(n, B, W, lam):.4f}"
+        print(line)
+        assert m >= lb - 1e-12
+
+
+def bench_fig17_sensitivity():
+    """Fig. 17 / App. J.1: runtime sensitivity to (B, W, lam)."""
+    src = _source(SEED + 7)
+    delays = src.sample_delays(90)
+    alpha = estimate_alpha(src)
+    J = 80
+    # M-SGC: sweep lam at fixed (B, W); runtime should be flat above a
+    # threshold (Remark J.1: "lam not critical once large enough")
+    msgc_times = {}
+    for lam in (8, 16, 32, 48, 64):
+        sch = make_scheme("m-sgc", N_WORKERS, J, B=2, W=3, lam=lam)
+        msgc_times[lam] = simulate(sch, delays, mu=MU, alpha=alpha, J=J).total_time
+        print(f"fig17.msgc_lam{lam},{msgc_times[lam]:.1f},"
+              f"load={sch.normalized_load:.4f}")
+    # runtime flattens once lam clears the per-window distinct-straggler
+    # count (~35 for this chain); load stays ~2/n throughout
+    flat = max(msgc_times[48], msgc_times[64]) / min(msgc_times[48], msgc_times[64])
+    assert flat < 1.1, "M-SGC should be insensitive to lam above threshold"
+    assert msgc_times[8] > msgc_times[48], "below threshold, wait-outs dominate"
+    # SR-SGC: lam drives the load directly -> runtime must grow
+    for lam in (8, 16, 24, 32):
+        sch = make_scheme("sr-sgc", N_WORKERS, J, B=2, W=3, lam=lam)
+        t = simulate(sch, delays, mu=MU, alpha=alpha, J=J).total_time
+        print(f"fig17.srsgc_lam{lam},{t:.1f},load={sch.normalized_load:.4f}")
+    # B sensitivity for M-SGC at fixed W-B gap
+    for B, W in ((1, 2), (2, 3), (3, 4)):
+        sch = make_scheme("m-sgc", N_WORKERS, J, B=B, W=W, lam=24)
+        t = simulate(sch, delays, mu=MU, alpha=alpha, J=J).total_time
+        print(f"fig17.msgc_B{B}W{W},{t:.1f},T={sch.T}")
+
+
+def bench_ge_fit():
+    """App. C: the GE chain fits the observed straggler transitions."""
+    from repro.core.straggler import fit_gilbert_elliot, suggest_parameters
+
+    src = _source(SEED)
+    pat = src.sample_pattern(300)
+    fit = fit_gilbert_elliot(pat)
+    print(f"gefit.p_ns,{fit['p_ns']:.4f},true={GE['p_ns']}")
+    print(f"gefit.p_sn,{fit['p_sn']:.4f},true={GE['p_sn']}")
+    print(f"gefit.stationary,{fit['stationary']:.4f},")
+    assert abs(fit["p_ns"] - GE["p_ns"]) < 0.01
+    assert abs(fit["p_sn"] - GE["p_sn"]) < 0.05
+    sugg = suggest_parameters(pat)
+    print(f"gefit.suggested_B,{sugg['B']},lam_by_W={sugg['lam_by_W']}")
+
+
+def bench_fig18_switchover():
+    """Fig. 18 / App. K.2: start uncoded, switch to coded after T_probe.
+
+    Uses the REAL multi-model training driver (every gradient computed
+    and decoded) at a reduced worker count so the python master stays
+    fast; compares against never switching."""
+    from repro.core import GilbertElliotSource
+    from repro.core.schemes import make_scheme as _mk
+    from repro.core.simulator import simulate as _sim
+    from repro.train import run_adaptive
+
+    n, J, t_probe = 64, 60, 20
+    delays = GilbertElliotSource(
+        n=n, p_ns=GE["p_ns"], p_sn=GE["p_sn"],
+        slow_factor=GE["slow_factor"], seed=SEED + 11,
+    ).sample_delays(J + 8)
+    total, probe, params, drv = run_adaptive(
+        4, J, delays, scheme_name="m-sgc", t_probe=t_probe,
+        grid=[{"B": B, "W": B + 1, "lam": lam}
+              for B in (1, 2) for lam in (8, 16, 24)],
+    )
+    print(f"fig18.adaptive_total,{total:.1f},probe={probe:.1f} "
+          f"selected={params}")
+    never = _sim(
+        _mk("uncoded", n, J), delays, mu=MU, alpha=8.0, J=J
+    ).total_time
+    print(f"fig18.never_switch,{never:.1f},pure uncoded")
+    assert total < never, "switching must beat staying uncoded"
+    final = [drv.losses[m][-1] for m in range(4)]
+    print(f"fig18.final_losses,{[f'{l:.3f}' for l in final]},"
+          "training carried across the switch")
+
+
+def bench_appg_rep():
+    """App. G: GC-Rep vs general GC — same load, superset tolerance,
+    hence fewer wait-outs and no slower runtime."""
+    n, J, s = 256, 120, 15  # (s+1) | n -> Rep available
+    src = _source(SEED + 3)
+    delays = src.sample_delays(J + 2)
+    alpha = estimate_alpha(src)
+    rows = {}
+    for rep in (True, False):
+        sch = make_scheme("gc", n, J, s=s, prefer_rep=rep)
+        res = simulate(sch, delays, mu=MU, alpha=alpha, J=J)
+        rows[rep] = res
+        print(f"appg.gc_{'rep' if rep else 'general'},"
+              f"{res.total_time:.1f},waitouts={res.waitouts}")
+    assert rows[True].waitouts <= rows[False].waitouts
+    assert rows[True].total_time <= rows[False].total_time + 1e-9
+    # SR-SGC-Rep (Algorithm 3) vs the same parameters
+    sch = make_scheme("sr-sgc", n, J, B=2, W=3, lam=23)
+    res = simulate(sch, delays, mu=MU, alpha=alpha, J=J)
+    print(f"appg.sr_sgc_s{sch.s},{res.total_time:.1f},"
+          f"rep={'RepGradientCode' in type(sch.code).__name__} "
+          f"waitouts={res.waitouts}")
+
+
+def bench_roofline():
+    """§Roofline: three terms per (arch, shape, mesh) from the dry-run."""
+    from . import roofline
+
+    rows = roofline.roofline_table()
+    if not rows:
+        print("roofline.status,0,no dry-run artifacts — run "
+              "`python -m repro.launch.dryrun --all` first")
+        return
+    print(roofline.format_table(rows))
+    for r in rows:
+        print(
+            f"roofline.{r.arch}.{r.shape}.{r.mesh}{'.coded' if r.coded else ''},"
+            f"{r.step_s:.3e},dominant={r.dominant} ratio={r.ratio:.2f}"
+        )
+
+
+BENCHES = {
+    "fig1": bench_fig1_trace_stats,
+    "fig16": bench_fig16_load_runtime,
+    "table1": bench_table1_runtime,
+    "table3": bench_table3_probe,
+    "table4": bench_table4_decode,
+    "fig2": bench_fig2_progress,
+    "fig11": bench_fig11_load_bounds,
+    "fig17": bench_fig17_sensitivity,
+    "fig18": bench_fig18_switchover,
+    "gefit": bench_ge_fit,
+    "appg": bench_appg_rep,
+    "roofline": bench_roofline,
+}
+
+
+def main() -> None:
+    which = sys.argv[1:] or list(BENCHES)
+    for name in which:
+        print(f"\n===== {name} =====")
+        t0 = time.time()
+        BENCHES[name]()
+        print(f"{name}.bench_seconds,{time.time() - t0:.1f},")
+
+
+if __name__ == "__main__":
+    main()

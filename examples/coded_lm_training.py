@@ -1,0 +1,83 @@
+"""End-to-end driver: GC-coded training of a ~100M-parameter LM.
+
+Builds a 12-layer / d=768 llama-style decoder (~110M params with the
+32k vocab), shards the batch into the cyclic (n, s+1) coded view, and
+runs real AdamW steps through ``make_coded_train_step`` with a random
+straggler per round — the production train path at laptop scale.
+
+Run:  PYTHONPATH=src python examples/coded_lm_training.py --steps 5
+(a few hundred steps reproduce a smooth LM loss curve on real hardware;
+CPU costs ~80 s/step at the default batch, so the default is 5 steps).
+"""
+
+import argparse
+import time
+
+import numpy as np
+
+import jax
+
+from repro.core.gc import make_gradient_code
+from repro.data import gc_chunked_batch, token_batch
+from repro.models.config import ModelConfig
+from repro.train.coded import (
+    gc_round_weights,
+    init_train_state,
+    make_coded_train_step,
+)
+
+CFG = ModelConfig(
+    name="llama-100m",
+    family="dense",
+    num_layers=12,
+    d_model=768,
+    num_heads=12,
+    num_kv_heads=4,
+    head_dim=64,
+    d_ff=2048,
+    vocab_size=32_000,
+    rope_theta=500_000.0,
+    tie_embeddings=True,
+    source="llama-style ~100M demo",
+)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=5)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--workers", type=int, default=4)
+    ap.add_argument("--tolerance", type=int, default=1)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    n, s = args.workers, args.tolerance
+    code = make_gradient_code(n, s)
+    params, opt = init_train_state(CFG, jax.random.PRNGKey(args.seed))
+    n_params = sum(p.size for p in jax.tree.leaves(params))
+    print(f"model: {CFG.name}  params={n_params/1e6:.1f}M  "
+          f"coded over n={n} workers, s={s} straggler tolerance "
+          f"(load {(s+1)/n:.2f})")
+
+    step = jax.jit(make_coded_train_step(CFG, n, s, lr=3e-4))
+    rng = np.random.default_rng(args.seed)
+    t0 = time.time()
+    for i in range(args.steps):
+        batch = token_batch(args.seed, i, args.batch, args.seq, CFG.vocab_size)
+        coded = gc_chunked_batch(batch, n, s)
+        # one random straggler per round (within tolerance)
+        straggler = int(rng.integers(n))
+        survivors = [w for w in range(n) if w != straggler]
+        w = gc_round_weights(code, survivors)
+        params, opt, m = step(params, opt, coded, w)
+        if i % 5 == 0 or i == args.steps - 1:
+            print(f"step {i:4d}  loss={float(m['loss']):.4f}  "
+                  f"straggler=worker-{straggler}  "
+                  f"({(time.time()-t0)/(i+1):.1f}s/step)")
+    print("done — every update used the exact full-batch gradient "
+          "despite a straggler per round.")
+
+
+if __name__ == "__main__":
+    main()

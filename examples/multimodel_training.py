@@ -1,0 +1,59 @@
+"""The paper's §4.2 experiment, end to end: train M=4 classifiers
+concurrently (interleaved, Remark 2.1) on a 64-worker cluster with
+naturally bursty (Gilbert-Elliott) stragglers, under all four schemes.
+
+Every gradient is REALLY computed and decoded (numerics are exact); the
+wall clock is simulated from the delay profile so scheme runtimes are
+comparable — the Table-1 experiment at laptop scale.
+
+Run:  PYTHONPATH=src python examples/multimodel_training.py [--jobs 120]
+"""
+
+import argparse
+
+from repro.core import GilbertElliotSource, make_scheme
+from repro.train import CodedTrainingDriver
+
+SCHEMES = {
+    "m-sgc": dict(B=1, W=2, lam=12),
+    "sr-sgc": dict(B=1, W=2, lam=12),
+    "gc": dict(s=8),
+    "uncoded": {},
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--jobs", type=int, default=80)
+    ap.add_argument("--workers", type=int, default=64)
+    ap.add_argument("--models", type=int, default=4)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    delays = GilbertElliotSource(
+        n=args.workers, p_ns=0.035, p_sn=0.85, slow_factor=6.0,
+        seed=args.seed,
+    ).sample_delays(args.jobs + 8)
+
+    print(f"{'scheme':9s} {'load':>7s} {'T':>2s} {'sim runtime':>12s} "
+          f"{'final losses (M models)'}")
+    results = {}
+    for name, kw in SCHEMES.items():
+        sch = make_scheme(name, args.workers, args.jobs, **kw)
+        drv = CodedTrainingDriver(
+            scheme=sch, num_models=args.models, batch_size=256,
+            lr=5e-3, seed=args.seed,
+        )
+        clock = drv.run(args.jobs, delays)
+        finals = [drv.losses[m][-1] for m in range(args.models)]
+        results[name] = clock
+        print(f"{name:9s} {sch.normalized_load:7.4f} {sch.T:2d} "
+              f"{clock:11.1f}s  {[f'{l:.3f}' for l in finals]}")
+
+    gain = 1 - results["m-sgc"] / results["gc"]
+    print(f"\nM-SGC vs GC runtime gain: {gain:.1%} "
+          f"(paper Table 1: 16% on 256 Lambda workers)")
+
+
+if __name__ == "__main__":
+    main()

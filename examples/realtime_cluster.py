@@ -1,0 +1,110 @@
+"""Real asynchronous stragglers: a thread-pool "cluster" whose workers
+compute ACTUAL chunk gradients with injected latency jitter, and a
+master that applies the paper's live mu-rule (§2): wait for the fastest
+worker, then (1+mu)*kappa more seconds, cancel the rest.
+
+Unlike the simulator, nothing here is scripted — straggler identities
+emerge from wall-clock timing, and the GC decode still reconstructs the
+exact full-batch gradient every round.
+
+Run:  PYTHONPATH=src python examples/realtime_cluster.py [--rounds 8]
+"""
+
+import argparse
+import time
+from concurrent.futures import ThreadPoolExecutor, wait
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import GradientCode
+from repro.data import classification_batch
+from repro.train.driver import MLPModel
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--workers", type=int, default=8)
+    ap.add_argument("--tolerance", type=int, default=2)
+    ap.add_argument("--rounds", type=int, default=8)
+    ap.add_argument("--mu", type=float, default=1.0)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    n, s = args.workers, args.tolerance
+    code = GradientCode(n, s, seed=args.seed)
+    model = MLPModel()
+    params = model.init(jax.random.PRNGKey(args.seed))
+    grad_sum = jax.jit(jax.grad(model.loss_sum))
+    rng = np.random.default_rng(args.seed)
+
+    def worker_task(i, job, x, y, bounds):
+        # naturally jittered latency; occasional heavy straggle
+        delay = 0.05 * (1 + rng.exponential(0.3))
+        if rng.random() < 0.15:
+            delay += 0.4  # straggler event
+        time.sleep(delay)
+        row = code.encode_matrix[i]
+        sup = np.flatnonzero(row)
+        ell = None
+        for c in sup:
+            lo, hi = bounds[c]
+            g = grad_sum(params, x[lo:hi], y[lo:hi])
+            g = jax.tree.map(lambda a: float(row[c]) * a, g)
+            ell = g if ell is None else jax.tree.map(jnp.add, ell, g)
+        return i, ell
+
+    pool = ThreadPoolExecutor(max_workers=n)
+    batch = 256
+    cb = batch // n
+    bounds = [(k * cb, (k + 1) * cb) for k in range(n)]
+
+    for t in range(1, args.rounds + 1):
+        x, y = classification_batch(args.seed, t, batch, model.dim,
+                                    model.classes)
+        t0 = time.perf_counter()
+        futs = {pool.submit(worker_task, i, t, x, y, bounds): i
+                for i in range(n)}
+        # live mu-rule: wait for the first result, then mu*kappa more
+        done, pending = wait(futs, return_when="FIRST_COMPLETED")
+        kappa = time.perf_counter() - t0
+        done2, pending = wait(futs, timeout=args.mu * kappa)
+        results = {}
+        for f in done2:
+            i, ell = f.result()
+            results[i] = ell
+        stragglers = sorted(futs[f] for f in pending)
+        if len(results) < n - s:
+            # Remark 2.3: wait out enough stragglers to decode
+            for f in list(pending):
+                i, ell = f.result()
+                results[i] = ell
+                if len(results) >= n - s:
+                    break
+        survivors = sorted(results)
+        beta = code.decode_vector(survivors)
+        decoded = None
+        for i in survivors:
+            if beta[i] == 0.0:
+                continue
+            g = jax.tree.map(lambda a: float(beta[i]) * a, results[i])
+            decoded = g if decoded is None else jax.tree.map(jnp.add, decoded, g)
+        oracle = grad_sum(params, x, y)
+        err = max(
+            float(jnp.max(jnp.abs(a - b)))
+            for a, b in zip(jax.tree.leaves(decoded), jax.tree.leaves(oracle))
+        )
+        dur = time.perf_counter() - t0
+        print(f"round {t}: kappa={kappa*1e3:5.0f}ms  "
+              f"stragglers={stragglers}  survivors={len(survivors)}/{n}  "
+              f"decode_err={err:.2e}  round={dur*1e3:5.0f}ms")
+        assert err < 1e-3
+    pool.shutdown()
+    print("\nevery round decoded the exact full-batch gradient from "
+          "whichever workers beat the mu-rule cutoff.")
+
+
+if __name__ == "__main__":
+    main()

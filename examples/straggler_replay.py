@@ -1,0 +1,39 @@
+"""App-J parameter selection: probe the cluster uncoded, replay the
+load-adjusted delay profile against candidate (B, W, lam) grids, pick
+the fastest operating point per scheme, then validate on fresh rounds.
+
+Run:  PYTHONPATH=src python examples/straggler_replay.py
+"""
+
+from repro.core import (
+    GilbertElliotSource,
+    estimate_alpha,
+    make_scheme,
+    select_parameters,
+    simulate,
+)
+
+N, T_PROBE, J = 128, 40, 160
+
+src = GilbertElliotSource(n=N, p_ns=0.035, p_sn=0.85, slow_factor=6.0, seed=3)
+probe = src.sample_delays(T_PROBE)               # uncoded probe rounds
+fresh = GilbertElliotSource(
+    n=N, p_ns=0.035, p_sn=0.85, slow_factor=6.0, seed=99
+).sample_delays(J + 8)                            # held-out rounds
+alpha = estimate_alpha(src)
+
+print(f"probing {T_PROBE} rounds on {N} workers; alpha={alpha:.1f}s/load\n")
+print(f"{'scheme':9s} {'selected params':28s} {'load':>7s} "
+      f"{'probe est/job':>13s} {'validation':>11s}")
+
+for name in ("m-sgc", "sr-sgc", "gc"):
+    cand = select_parameters(name, N, probe, alpha=alpha)
+    sch = make_scheme(name, N, J, **cand.params)
+    res = simulate(sch, fresh, alpha=alpha, J=J)
+    print(f"{name:9s} {str(cand.params):28s} {cand.load:7.4f} "
+          f"{cand.est_time:12.2f}s {res.total_time:10.1f}s")
+
+uncoded = make_scheme("uncoded", N, J)
+res = simulate(uncoded, fresh, alpha=alpha, J=J)
+print(f"{'uncoded':9s} {'{}':28s} {uncoded.normalized_load:7.4f} "
+      f"{'-':>13s} {res.total_time:10.1f}s")

@@ -1,0 +1,91 @@
+"""npz-based pytree checkpointing with structure + dtype round-trip.
+
+Leaves are stored under path-encoded keys; structure (treedef repr +
+per-leaf dtype) rides along so bf16 params restore as bf16.  Multi-host
+note: in a real pod deployment each host saves its addressable shards;
+here (single host / dry-run) the full tree is materialized.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_SEP = "/"
+
+
+def _flatten_with_paths(tree):
+    flat = jax.tree_util.tree_flatten_with_path(tree)
+    leaves = []
+    for path, leaf in flat[0]:
+        key = _SEP.join(_path_str(p) for p in path)
+        leaves.append((key, leaf))
+    return leaves, flat[1]
+
+
+def _path_str(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return str(p.idx)
+    if hasattr(p, "name"):
+        return str(p.name)
+    return str(p)
+
+
+def save_pytree(path: str, tree) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    leaves, _ = _flatten_with_paths(tree)
+    arrays = {}
+    meta = {}
+    for key, leaf in leaves:
+        arr = np.asarray(leaf)
+        meta[key] = str(arr.dtype) if arr.dtype != np.dtype("bfloat16") else "bfloat16"
+        if meta[key] == "bfloat16":
+            arr = arr.astype(np.float32)
+        arrays[key] = arr
+    np.savez(path, __meta__=json.dumps(meta), **arrays)
+
+
+def load_pytree(path: str, like):
+    """Restore into the structure of ``like`` (shapes must match)."""
+    with np.load(path, allow_pickle=False) as zf:
+        meta = json.loads(str(zf["__meta__"]))
+        leaves, treedef = _flatten_with_paths(like)
+        out = []
+        for key, ref in leaves:
+            arr = zf[key]
+            dtype = meta[key]
+            out.append(jnp.asarray(arr, dtype=jnp.dtype(dtype)))
+            if tuple(arr.shape) != tuple(ref.shape):
+                raise ValueError(
+                    f"shape mismatch for {key}: {arr.shape} vs {ref.shape}"
+                )
+    return jax.tree.unflatten(treedef, out)
+
+
+def save_train_state(path: str, params, opt_state, *, step: int, extra=None):
+    save_pytree(
+        path,
+        {
+            "params": params,
+            "opt": opt_state._asdict() if hasattr(opt_state, "_asdict") else opt_state,
+            "step": jnp.asarray(step, jnp.int32),
+            "extra": extra or {},
+        },
+    )
+
+
+def restore_train_state(path: str, params_like, opt_like):
+    like = {
+        "params": params_like,
+        "opt": opt_like._asdict() if hasattr(opt_like, "_asdict") else opt_like,
+        "step": jnp.zeros((), jnp.int32),
+        "extra": {},
+    }
+    tree = load_pytree(path, like)
+    return tree["params"], tree["opt"], int(tree["step"])

@@ -1,0 +1,38 @@
+"""hubert-xlarge [audio] — encoder-only, wav2vec2-style backbone
+[arXiv:2106.07447].
+
+The mel-spectrogram + conv feature extractor is STUBBED per the
+assignment: ``input_specs`` provides precomputed frame embeddings of
+width d_model.  Encoder-only => no autoregressive decode step
+(decode_32k / long_500k skipped; see DESIGN.md §Arch-applicability).
+"""
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="hubert-xlarge",
+    family="audio",
+    num_layers=48,
+    d_model=1280,
+    num_heads=16,
+    num_kv_heads=16,
+    head_dim=80,
+    d_ff=5120,
+    vocab_size=504,
+    causal=False,
+    frontend="audio_stub",
+    dtype="bfloat16",
+    source="arXiv:2106.07447",
+)
+
+SMOKE = CONFIG.replace(
+    name="hubert-xlarge-smoke",
+    num_layers=2,
+    d_model=256,
+    num_heads=4,
+    num_kv_heads=4,
+    head_dim=64,
+    d_ff=512,
+    vocab_size=64,
+    dtype="float32",
+)

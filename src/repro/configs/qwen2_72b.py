@@ -1,0 +1,31 @@
+"""qwen2-72b [dense] — GQA, QKV bias [arXiv:2407.10671]."""
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2-72b",
+    family="dense",
+    num_layers=80,
+    d_model=8192,
+    num_heads=64,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=29568,
+    vocab_size=152064,
+    qkv_bias=True,
+    rope_theta=1_000_000.0,
+    dtype="bfloat16",
+    source="arXiv:2407.10671",
+)
+
+SMOKE = CONFIG.replace(
+    name="qwen2-72b-smoke",
+    num_layers=2,
+    d_model=256,
+    num_heads=8,
+    num_kv_heads=2,
+    head_dim=32,
+    d_ff=512,
+    vocab_size=512,
+    dtype="float32",
+)

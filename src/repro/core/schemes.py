@@ -1,0 +1,479 @@
+"""Sequential gradient coding schemes (paper §3).
+
+Every scheme is a *round scheduler* with the master-side state machine:
+
+    for t in 1 .. J+T:
+        tasks = scheme.assign(t)            # task table for round-t
+        ...                                  # workers run, stragglers observed
+        scheme.observe(t, straggler_mask)    # bool[n], True = straggler
+        done = scheme.collect(t)             # jobs decodable at end of round-t
+
+``assign`` returns per-worker task descriptors rich enough for the real
+coded trainer (chunk ids + encode coefficients), while the runtime
+simulator only consumes the per-round load.  The wait-out rule of
+Remark 2.3 lives *outside* the scheme (see ``simulator.py`` /
+``train/driver.py``): the caller must only feed ``observe`` straggler
+sets admitted by ``scheme.design_model`` — under that contract every
+job-t is decodable by the end of round-(t+T) (Props 3.1 / 3.2), which
+``collect`` asserts.
+
+Task descriptor vocabulary (``MiniTask.kind``):
+    "ell"  — full (n,s)-GC task: all ``s+1`` cyclic chunks of job-t
+             (GC / SR-SGC; a re-attempt iff job < t).
+    "d1"   — one private D1 chunk (M-SGC; re-attempt iff ``retry``).
+    "d2"   — coded D2 group task: ``lam+1`` chunks of one group (M-SGC).
+    "all"  — plain chunk-i computation (uncoded baseline).
+    "none" — trivial (job outside [1:J]).
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from .gc import GradientCode, RepGradientCode, make_gradient_code
+from .straggler import (
+    ArbitraryModel,
+    BurstyModel,
+    MixtureModel,
+    PerRoundModel,
+    RepCoverageModel,
+    WindowwiseOr,
+)
+
+__all__ = [
+    "MiniTask",
+    "JobDecode",
+    "GCScheme",
+    "SRSGCScheme",
+    "MSGCScheme",
+    "NoCodingScheme",
+    "make_scheme",
+]
+
+
+@dataclass(frozen=True)
+class MiniTask:
+    kind: str          # "ell" | "d1" | "d2" | "all" | "none"
+    job: int
+    worker: int
+    chunk: int = -1    # global chunk id for d1/all; group index m for d2
+    retry: bool = False
+
+    @property
+    def trivial(self) -> bool:
+        return self.kind == "none"
+
+
+@dataclass
+class JobDecode:
+    """How the master reconstructs g(job) once decodable.
+
+    ``ell_weights``: {worker: beta} for GC-style results (job-level for
+    GC/SR-SGC, per-group for M-SGC in ``group_weights``).
+    ``d1_workers``: workers whose private-chunk partial sums enter with
+    coefficient 1 (M-SGC g'(t) part / uncoded baseline).
+    """
+
+    job: int
+    round_done: int
+    ell_weights: dict = field(default_factory=dict)
+    group_weights: dict = field(default_factory=dict)  # m -> {worker: beta}
+    d1_workers: list = field(default_factory=list)
+
+
+class Scheme:
+    name: str = "base"
+    n: int
+    T: int
+    design_model: MixtureModel
+    normalized_load: float
+
+    def assign(self, t: int) -> list[MiniTask]:
+        raise NotImplementedError
+
+    def observe(self, t: int, stragglers: np.ndarray) -> None:
+        raise NotImplementedError
+
+    def collect(self, t: int) -> list[JobDecode]:
+        raise NotImplementedError
+
+    def round_load(self, t: int) -> float:
+        """Per-worker normalized load in round-t (constant for all schemes)."""
+        return self.normalized_load
+
+
+# ---------------------------------------------------------------------------
+# (n, s)-GC applied round-wise (baseline, §3.1)
+# ---------------------------------------------------------------------------
+
+
+class GCScheme(Scheme):
+    name = "gc"
+
+    def __init__(self, n: int, s: int, J: int, *, prefer_rep: bool = True, seed: int = 0):
+        self.n, self.s, self.J = n, s, J
+        self.T = 0
+        self.code = make_gradient_code(n, s, prefer_rep=prefer_rep, seed=seed)
+        # App. G: GC-Rep tolerates any pattern leaving one survivor per
+        # replication group — a strict superset of <= s per round.
+        if isinstance(self.code, RepGradientCode) and s > 0:
+            self.design_model = MixtureModel(
+                (RepCoverageModel(n, s), PerRoundModel(s))
+            )
+        else:
+            self.design_model = PerRoundModel(s)
+        self.normalized_load = (s + 1) / n
+        self._returned: dict[int, set[int]] = {}
+        self._done: set[int] = set()
+
+    def assign(self, t: int) -> list[MiniTask]:
+        if not 1 <= t <= self.J:
+            return [MiniTask("none", t, i) for i in range(self.n)]
+        return [MiniTask("ell", t, i) for i in range(self.n)]
+
+    def observe(self, t: int, stragglers: np.ndarray) -> None:
+        if 1 <= t <= self.J:
+            self._returned[t] = set(np.flatnonzero(~stragglers).tolist())
+
+    def collect(self, t: int) -> list[JobDecode]:
+        if t in self._done or not 1 <= t <= self.J:
+            return []
+        surv = self._returned.get(t, set())
+        if not self.code.can_decode(surv):
+            raise AssertionError(
+                f"GC: job {t} undecodable from {len(surv)} survivors; "
+                "caller violated the wait-out contract"
+            )
+        beta = self.code.decode_vector(sorted(surv))
+        self._done.add(t)
+        return [
+            JobDecode(
+                job=t,
+                round_done=t,
+                ell_weights={w: float(beta[w]) for w in surv if beta[w] != 0.0},
+            )
+        ]
+
+
+# ---------------------------------------------------------------------------
+# SR-SGC (§3.2, Algorithm 1)
+# ---------------------------------------------------------------------------
+
+
+class SRSGCScheme(Scheme):
+    name = "sr-sgc"
+
+    def __init__(self, n: int, B: int, W: int, lam: int, J: int, *,
+                 prefer_rep: bool = True, seed: int = 0):
+        if B <= 0 or (W - 1) % B != 0:
+            raise ValueError("SR-SGC requires B > 0 and B | (W - 1)")
+        if not 0 < lam <= n:
+            raise ValueError("SR-SGC requires 0 < lam <= n")
+        x = (W - 1) // B
+        self.n, self.B, self.W, self.lam, self.J = n, B, W, lam, J
+        self.s = math.ceil(B * lam / (W - 1 + B))
+        assert self.s == math.ceil(lam / (x + 1))
+        self.T = B
+        self.code = make_gradient_code(n, self.s, prefer_rep=prefer_rep, seed=seed)
+        # Prop 3.1: every W-window must be bursty-conforming OR have
+        # <= s stragglers per round (window-wise mixture).
+        self.design_model = WindowwiseOr(
+            (BurstyModel(B, W, lam), PerRoundModel(self.s)), W
+        )
+        self.normalized_load = (self.s + 1) / n
+        # master state
+        self._returned: dict[int, set[int]] = {}        # job -> workers with l_i(job)
+        self._returned_in_round: dict[int, int] = {}    # paper's N(t)
+        self._assigned: dict[int, list[int]] = {}       # round -> job per worker
+        self._done: dict[int, int] = {}                 # job -> round finished
+
+    def _N(self, t: int) -> int:
+        """N(t): # of job-t results returned during round-t (N=n outside [1:J])."""
+        if not 1 <= t <= self.J:
+            return self.n
+        return self._returned_in_round.get(t, 0)
+
+    def assign(self, t: int) -> list[MiniTask]:
+        jobs = []
+        delta = self._N(t - self.B)
+        prev = self._assigned.get(t - self.B, [None] * self.n)
+        prev_returned = self._returned.get(t - self.B, set())
+        rep = isinstance(self.code, RepGradientCode)
+        covered_groups = (
+            {self.code.group_of(w) for w in prev_returned} if rep else set()
+        )
+        for i in range(self.n):
+            attempted_and_returned = prev[i] == t - self.B and i in prev_returned
+            if rep and self.code.group_of(i) in covered_groups:
+                # Algorithm 3 (App. G): the group's replicated result is
+                # already in — no point re-attempting it
+                jobs.append(t)
+                continue
+            if delta < self.n - self.s and not attempted_and_returned and 1 <= t - self.B <= self.J:
+                jobs.append(t - self.B)
+                delta += 1
+            else:
+                jobs.append(t)
+        self._assigned[t] = jobs
+        return [
+            MiniTask("ell", j, i, retry=j < t) if 1 <= j <= self.J
+            else MiniTask("none", j, i)
+            for i, j in enumerate(jobs)
+        ]
+
+    def observe(self, t: int, stragglers: np.ndarray) -> None:
+        jobs = self._assigned[t]
+        fresh = 0
+        for i in range(self.n):
+            j = jobs[i]
+            if not stragglers[i] and 1 <= j <= self.J:
+                self._returned.setdefault(j, set()).add(i)
+                if j == t:
+                    fresh += 1
+        self._returned_in_round[t] = fresh
+
+    def collect(self, t: int) -> list[JobDecode]:
+        out = []
+        for job in (t, t - self.B):
+            if not 1 <= job <= self.J or job in self._done:
+                continue
+            surv = self._returned.get(job, set())
+            if self.code.can_decode(surv):
+                beta = self.code.decode_vector(sorted(surv))
+                self._done[job] = t
+                out.append(
+                    JobDecode(
+                        job=job,
+                        round_done=t,
+                        ell_weights={w: float(beta[w]) for w in surv if beta[w] != 0.0},
+                    )
+                )
+            elif job == t - self.B:
+                raise AssertionError(
+                    f"SR-SGC: job {job} missed deadline round {t}; "
+                    "caller violated the wait-out contract"
+                )
+        return out
+
+
+# ---------------------------------------------------------------------------
+# M-SGC (§3.3, Algorithm 2)
+# ---------------------------------------------------------------------------
+
+
+class MSGCScheme(Scheme):
+    """Multiplexed SGC with diagonally interleaved mini-tasks.
+
+    Data layout (general scheme, §3.3.2) for dataset of ``d`` points:
+      * D1: ``(W-1) * n`` private chunks; worker-i owns global chunks
+        ``i*(W-1) .. (i+1)*(W-1)-1``; each has fraction
+        ``w1 = (lam+1) / (n * (B + (W-1)(lam+1)))`` of the data.
+      * D2: ``B`` groups of ``n`` chunks each protected by an
+        (n, lam)-GC; group-m chunk c has global id ``(W-1)*n + m*n + c``
+        and fraction ``w2 = w1 / (lam+1)``.
+    ``lam == n`` degenerates to D2 = empty (Remark 3.2) with
+    ``w1 = 1 / ((W-1) n)``.
+
+    Round-t slot-j (j in [0 : W-2+B]) serves job ``t - j``:
+      * j <= W-2: first attempt of D1 local chunk j.
+      * j >= W-1 (m = j-W+1): earliest pending failed D1 chunk of that
+        job if any, else the group-m coded task ``l_{i,m}(job)``.
+    """
+
+    name = "m-sgc"
+
+    def __init__(self, n: int, B: int, W: int, lam: int, J: int, *,
+                 prefer_rep: bool = True, seed: int = 0):
+        if not (0 < B < W):
+            raise ValueError("M-SGC requires 0 < B < W")
+        if not 0 <= lam <= n:
+            raise ValueError("M-SGC requires 0 <= lam <= n")
+        self.n, self.B, self.W, self.lam, self.J = n, B, W, lam, J
+        self.T = W - 2 + B
+        self.slots = W - 1 + B
+        if lam < n:
+            denom = n * (B + (W - 1) * (lam + 1))
+            self.w1 = (lam + 1) / denom
+            self.w2 = 1.0 / denom
+            self.code = make_gradient_code(n, lam, prefer_rep=prefer_rep, seed=seed)
+            self.normalized_load = (lam + 1) * (W - 1 + B) / denom
+        else:  # Remark 3.2
+            self.w1 = 1.0 / ((W - 1) * n)
+            self.w2 = 0.0
+            self.code = None
+            self.normalized_load = (W - 1 + B) / (n * (W - 1))
+        self.design_model = MixtureModel(
+            (BurstyModel(B, W, lam), ArbitraryModel(B, W + B - 1, lam))
+        )
+        # master state, keyed by job
+        self._pending: dict[tuple[int, int], list[int]] = {}   # (job, worker) -> local chunks
+        self._d1_done: dict[int, np.ndarray] = {}              # job -> bool[n, W-1]
+        self._d2_returned: dict[int, list[set[int]]] = {}      # job -> [set per group]
+        self._assigned: dict[int, list[list[MiniTask]]] = {}   # round -> [n][slots]
+        self._done: dict[int, int] = {}
+
+    # -- chunk id helpers ------------------------------------------------
+    def d1_chunk(self, worker: int, local: int) -> int:
+        return worker * (self.W - 1) + local
+
+    def d2_group_chunks(self, worker: int, m: int) -> np.ndarray:
+        """Global chunk ids of worker's lam+1 chunks within D2 group-m."""
+        base = (self.W - 1) * self.n + m * self.n
+        from .gc import cyclic_support
+
+        return base + cyclic_support(worker, self.lam, self.n)
+
+    @property
+    def num_chunks(self) -> int:
+        return (self.W - 1) * self.n + (self.B * self.n if self.lam < self.n else 0)
+
+    def chunk_fraction(self, chunk: int) -> float:
+        return self.w1 if chunk < (self.W - 1) * self.n else self.w2
+
+    # -- scheduling --------------------------------------------------------
+    def _job_state(self, job: int):
+        if job not in self._d1_done:
+            self._d1_done[job] = np.zeros((self.n, self.W - 1), dtype=bool)
+            self._d2_returned[job] = [set() for _ in range(self.B)]
+        return self._d1_done[job], self._d2_returned[job]
+
+    def assign(self, t: int) -> list[MiniTask]:
+        table: list[list[MiniTask]] = []
+        flat: list[MiniTask] = []
+        # Track per (job, worker) which pending chunk the *next* slot should
+        # take.  Within one round, distinct slots serve distinct jobs, so a
+        # simple head-of-queue peek per job suffices.
+        for i in range(self.n):
+            row = []
+            for j in range(self.slots):
+                job = t - j
+                if not 1 <= job <= self.J:
+                    row.append(MiniTask("none", job, i))
+                    continue
+                if j <= self.W - 2:
+                    row.append(MiniTask("d1", job, i, chunk=self.d1_chunk(i, j)))
+                    continue
+                m = j - (self.W - 1)
+                pend = self._pending.get((job, i))
+                if pend:
+                    row.append(
+                        MiniTask("d1", job, i, chunk=self.d1_chunk(i, pend[0]), retry=True)
+                    )
+                elif self.lam < self.n:
+                    row.append(MiniTask("d2", job, i, chunk=m))
+                else:
+                    row.append(MiniTask("none", job, i))
+            table.append(row)
+            flat.extend(row)
+        self._assigned[t] = table
+        return flat
+
+    def observe(self, t: int, stragglers: np.ndarray) -> None:
+        table = self._assigned[t]
+        for i in range(self.n):
+            for mt in table[i]:
+                if mt.trivial:
+                    continue
+                if mt.kind == "d1":
+                    local = mt.chunk - i * (self.W - 1)
+                    d1, _ = self._job_state(mt.job)
+                    key = (mt.job, i)
+                    if stragglers[i]:
+                        if not mt.retry:
+                            self._pending.setdefault(key, []).append(local)
+                        # retry failure: chunk stays at queue head
+                    else:
+                        d1[i, local] = True
+                        if mt.retry:
+                            self._pending[key].pop(0)
+                            if not self._pending[key]:
+                                del self._pending[key]
+                elif mt.kind == "d2" and not stragglers[i]:
+                    _, d2 = self._job_state(mt.job)
+                    d2[mt.chunk].add(i)
+
+    def collect(self, t: int) -> list[JobDecode]:
+        out = []
+        lo = max(1, t - self.T)
+        for job in range(lo, min(t, self.J) + 1):
+            if job in self._done or job not in self._d1_done:
+                continue
+            d1, d2 = self._d1_done[job], self._d2_returned[job]
+            d1_ok = bool(d1.all())
+            d2_ok = self.lam == self.n or all(
+                len(g) >= self.n - self.lam for g in d2
+            )
+            if d1_ok and d2_ok:
+                gw = {}
+                if self.lam < self.n:
+                    for m in range(self.B):
+                        beta = self.code.decode_vector(sorted(d2[m]))
+                        gw[m] = {
+                            w: float(beta[w]) for w in d2[m] if beta[w] != 0.0
+                        }
+                self._done[job] = t
+                out.append(
+                    JobDecode(
+                        job=job,
+                        round_done=t,
+                        d1_workers=list(range(self.n)),
+                        group_weights=gw,
+                    )
+                )
+            elif job == t - self.T:
+                raise AssertionError(
+                    f"M-SGC: job {job} missed deadline round {t} "
+                    f"(d1_ok={d1_ok}, d2_ok={d2_ok}); "
+                    "caller violated the wait-out contract"
+                )
+        return out
+
+
+# ---------------------------------------------------------------------------
+# Uncoded baseline
+# ---------------------------------------------------------------------------
+
+
+class NoCodingScheme(Scheme):
+    name = "uncoded"
+
+    def __init__(self, n: int, J: int):
+        self.n, self.J = n, J
+        self.T = 0
+        self.design_model = PerRoundModel(0)
+        self.normalized_load = 1.0 / n
+        self._done: set[int] = set()
+        self._returned: dict[int, set[int]] = {}
+
+    def assign(self, t: int) -> list[MiniTask]:
+        if not 1 <= t <= self.J:
+            return [MiniTask("none", t, i) for i in range(self.n)]
+        return [MiniTask("all", t, i, chunk=i) for i in range(self.n)]
+
+    def observe(self, t: int, stragglers: np.ndarray) -> None:
+        if 1 <= t <= self.J:
+            if stragglers.any():
+                raise AssertionError("uncoded scheme tolerates no stragglers")
+            self._returned[t] = set(range(self.n))
+
+    def collect(self, t: int) -> list[JobDecode]:
+        if t in self._done or not 1 <= t <= self.J:
+            return []
+        self._done.add(t)
+        return [JobDecode(job=t, round_done=t, d1_workers=list(range(self.n)))]
+
+
+def make_scheme(name: str, n: int, J: int, **kw) -> Scheme:
+    name = name.lower().replace("_", "-")
+    if name == "gc":
+        return GCScheme(n, kw.pop("s"), J, **kw)
+    if name == "sr-sgc":
+        return SRSGCScheme(n, kw.pop("B"), kw.pop("W"), kw.pop("lam"), J, **kw)
+    if name == "m-sgc":
+        return MSGCScheme(n, kw.pop("B"), kw.pop("W"), kw.pop("lam"), J, **kw)
+    if name in ("uncoded", "none", "no-coding"):
+        return NoCodingScheme(n, J)
+    raise ValueError(f"unknown scheme {name!r}")

@@ -1,0 +1,397 @@
+"""Straggler models (paper §2.1) and sources.
+
+Deterministic sliding-window models used for code design:
+
+* ``BurstyModel(B, W, lam)`` — in every window of W consecutive rounds
+  there are at most ``lam`` *distinct* stragglers (spatial correlation),
+  and per worker the first/last straggling rounds inside the window are
+  < B apart (temporal correlation: bursts of length <= B, one burst per
+  window).
+* ``ArbitraryModel(N, W, lam)`` — at most ``lam`` distinct stragglers
+  per window and at most ``N`` straggling rounds per worker per window.
+* ``PerRoundModel(s)`` — at most ``s`` stragglers in every round.
+
+Stochastic ground truth:
+
+* ``GilbertElliotSource`` — the 2-state chain of App. C, used both to
+  sample straggler indicator matrices and to synthesize worker delay
+  profiles for the runtime simulator.
+
+Patterns are ``bool`` arrays of shape ``(rounds, n)`` with ``True`` =
+straggler (``S_i(t)`` in the paper, transposed to time-major).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+__all__ = [
+    "BurstyModel",
+    "ArbitraryModel",
+    "PerRoundModel",
+    "MixtureModel",
+    "WindowwiseOr",
+    "RepCoverageModel",
+    "ConformanceGate",
+    "GilbertElliotSource",
+    "TraceSource",
+    "fit_gilbert_elliot",
+    "suggest_parameters",
+]
+
+
+class StragglerModel:
+    """Interface: validate a full pattern or check incremental conformance."""
+
+    def conforms(self, pattern: np.ndarray) -> bool:
+        raise NotImplementedError
+
+    def admits_round(self, history: np.ndarray, candidate: np.ndarray) -> bool:
+        """Would appending ``candidate`` (bool[n]) keep the pattern valid?
+
+        Only windows touching the new round need rechecking; models here
+        are windowed, so we validate the suffix.
+        """
+        rounds = history.shape[0] if history.size else 0
+        ext = (
+            np.concatenate([history, candidate[None]], axis=0)
+            if rounds
+            else candidate[None].copy()
+        )
+        w = self.window
+        return self.conforms(ext[max(0, ext.shape[0] - w) :])
+
+    @property
+    def window(self) -> int:
+        raise NotImplementedError
+
+
+@dataclass(frozen=True)
+class PerRoundModel(StragglerModel):
+    s: int
+
+    def conforms(self, pattern: np.ndarray) -> bool:
+        return bool((pattern.sum(axis=1) <= self.s).all())
+
+    @property
+    def window(self) -> int:
+        return 1
+
+
+@dataclass(frozen=True)
+class BurstyModel(StragglerModel):
+    B: int
+    W: int
+    lam: int
+
+    def __post_init__(self) -> None:
+        if not (1 <= self.B <= self.W):
+            raise ValueError(f"need 1 <= B <= W, got B={self.B}, W={self.W}")
+        if self.lam < 0:
+            raise ValueError("lam must be >= 0")
+
+    def conforms(self, pattern: np.ndarray) -> bool:
+        rounds, _ = pattern.shape
+        for j in range(rounds):  # window [j : j + W - 1]
+            win = pattern[j : j + self.W]
+            # spatial: <= lam distinct stragglers in the window
+            if int(win.any(axis=0).sum()) > self.lam:
+                return False
+            # temporal: per worker, straggling rounds span < B
+            for i in np.flatnonzero(win.any(axis=0)):
+                rs = np.flatnonzero(win[:, i])
+                if rs[-1] - rs[0] >= self.B:
+                    return False
+        return True
+
+    @property
+    def window(self) -> int:
+        return self.W
+
+
+@dataclass(frozen=True)
+class ArbitraryModel(StragglerModel):
+    N: int
+    W: int
+    lam: int
+
+    def conforms(self, pattern: np.ndarray) -> bool:
+        rounds, _ = pattern.shape
+        for j in range(rounds):
+            win = pattern[j : j + self.W]
+            if int(win.any(axis=0).sum()) > self.lam:
+                return False
+            if int(win.sum(axis=0).max(initial=0)) > self.N:
+                return False
+        return True
+
+    @property
+    def window(self) -> int:
+        return self.W
+
+
+@dataclass(frozen=True)
+class MixtureModel(StragglerModel):
+    """Pattern is admissible if it conforms to ANY member model GLOBALLY.
+
+    Used for M-SGC (bursty OR arbitrary, Prop 3.2).  NOTE: a naive
+    per-round OR of ``admits_round`` is WRONG — it can weave rounds that
+    alternate between members so the final pattern satisfies neither
+    model.  Incremental admission must track which members are still
+    globally valid; use ``ConformanceGate`` for that.
+    """
+
+    members: tuple
+
+    def conforms(self, pattern: np.ndarray) -> bool:
+        return any(m.conforms(pattern) for m in self.members)
+
+    def admits_round(self, history: np.ndarray, candidate: np.ndarray) -> bool:
+        raise TypeError(
+            "MixtureModel admission is stateful; use ConformanceGate"
+        )
+
+    @property
+    def window(self) -> int:
+        return max(m.window for m in self.members)
+
+
+@dataclass(frozen=True)
+class RepCoverageModel(StragglerModel):
+    """App. G: with the GC-Rep code, a round is tolerable iff every
+    replication group of size (s+1) keeps at least one non-straggler —
+    a strict superset of the <= s-per-round patterns."""
+
+    n: int
+    s: int
+
+    def conforms(self, pattern: np.ndarray) -> bool:
+        g = self.s + 1
+        groups = pattern.reshape(pattern.shape[0], self.n // g, g)
+        return bool((~groups.all(axis=2)).all())
+
+    @property
+    def window(self) -> int:
+        return 1
+
+
+@dataclass(frozen=True)
+class WindowwiseOr(StragglerModel):
+    """Every length-W window must satisfy at least ONE member predicate
+    (members restricted to that window) — Prop 3.1's tolerance class for
+    SR-SGC: each window is bursty-conforming OR has <= s stragglers per
+    round.  Window predicates are local, so suffix-based incremental
+    admission is sound.
+    """
+
+    members: tuple
+    W: int
+
+    def conforms(self, pattern: np.ndarray) -> bool:
+        rounds = pattern.shape[0]
+        for j in range(rounds):
+            win = pattern[j : j + self.W]
+            if not any(m.conforms(win) for m in self.members):
+                return False
+        return True
+
+    @property
+    def window(self) -> int:
+        return self.W
+
+
+class ConformanceGate:
+    """Stateful Remark-2.3 wait-out gate.
+
+    Maintains the effective straggler history and, for mixture models,
+    which members are still globally satisfiable (a member that fails
+    once is dead forever — conformance violations are permanent).
+    ``admit(candidate)`` returns True and commits the round if the
+    pattern stays admissible; the caller waits out all stragglers (and
+    calls ``admit(zeros)``, which always succeeds) otherwise.
+    """
+
+    def __init__(self, model: StragglerModel, n: int):
+        if isinstance(model, MixtureModel):
+            self.members = list(model.members)
+        else:
+            self.members = [model]
+        self.alive = [True] * len(self.members)
+        self.history = np.zeros((0, n), dtype=bool)
+        self.n = n
+
+    def admit(self, candidate: np.ndarray) -> bool:
+        ok = [
+            i
+            for i, m in enumerate(self.members)
+            if self.alive[i] and m.admits_round(self.history, candidate)
+        ]
+        if not ok:
+            return False
+        self.alive = [i in ok for i in range(len(self.members))]
+        self.history = np.concatenate(
+            [self.history, candidate[None]], axis=0
+        )
+        return True
+
+    def force(self, candidate: np.ndarray) -> None:
+        """Commit a round unconditionally (used for the all-clear row
+        after a wait-out; zeros can never violate any model)."""
+        assert not candidate.any()
+        self.history = np.concatenate(
+            [self.history, candidate[None]], axis=0
+        )
+
+    def admit_partial(
+        self, candidate: np.ndarray, cost: np.ndarray
+    ) -> tuple[np.ndarray, list[int]]:
+        """Selective wait-out (Remark 2.3, refined).
+
+        Greedily waits out (drops from the straggler set) the cheapest
+        violating workers until the remaining set is admissible.  The
+        master pays ``max(cost[waited])`` extra round time but keeps the
+        effective pattern inside the design envelope with minimal
+        waiting — strictly better than the App-J "wait out all the
+        workers" fallback, which is the degenerate end of this loop.
+
+        Returns (effective straggler set, waited worker ids); commits.
+        """
+        cand = candidate.copy()
+        waited: list[int] = []
+        while cand.any():
+            ok = [
+                i
+                for i, m in enumerate(self.members)
+                if self.alive[i] and m.admits_round(self.history, cand)
+            ]
+            if ok:
+                self.alive = [i in ok for i in range(len(self.members))]
+                self.history = np.concatenate(
+                    [self.history, cand[None]], axis=0
+                )
+                return cand, waited
+            on = np.flatnonzero(cand)
+            drop = on[np.argmin(cost[on])]
+            cand[drop] = False
+            waited.append(int(drop))
+        self.history = np.concatenate([self.history, cand[None]], axis=0)
+        return cand, waited
+
+
+# ---------------------------------------------------------------------------
+# sources of ground-truth straggling / delays
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class GilbertElliotSource:
+    """2-state GE chain per worker (App. C).
+
+    ``p_ns``: P(non-straggler -> straggler); ``p_sn``: P(straggler ->
+    non-straggler).  Stationary straggler fraction = p_ns/(p_ns+p_sn).
+    Delays: non-straggler times ~ base * (1 + jitter), straggler times
+    ~ base * slow_factor * (1 + jitter) — a long right tail mirroring
+    Fig. 1(c).
+    """
+
+    n: int
+    p_ns: float = 0.05
+    p_sn: float = 0.6
+    base_time: float = 1.0
+    slow_factor: float = 4.0
+    jitter: float = 0.08
+    # Fig. 16 slope: extra seconds per unit of normalized load.  In the
+    # paper's Lambda cluster the per-round time is dominated by a fixed
+    # overhead (~base_time); full-load compute adds ~8x base on top.
+    compute_scale: float = 8.0
+    seed: int = 0
+
+    @property
+    def alpha(self) -> float:
+        return self.base_time * self.compute_scale
+
+    def sample_pattern(self, rounds: int) -> np.ndarray:
+        rng = np.random.default_rng(self.seed)
+        state = rng.random(self.n) < self.p_ns / (self.p_ns + self.p_sn)
+        out = np.zeros((rounds, self.n), dtype=bool)
+        for t in range(rounds):
+            out[t] = state
+            flip = rng.random(self.n)
+            state = np.where(state, flip >= self.p_sn, flip < self.p_ns)
+        return out
+
+    def sample_delays(self, rounds: int) -> np.ndarray:
+        """(rounds, n) seconds at the reference load 1/n."""
+        rng = np.random.default_rng(self.seed + 1)
+        pat = self.sample_pattern(rounds)
+        base = self.base_time * (1.0 + self.jitter * rng.standard_normal((rounds, self.n)) ** 2)
+        slow = 1.0 + (self.slow_factor - 1.0) * rng.random((rounds, self.n))
+        return np.where(pat, base * np.maximum(slow, 1.0), base)
+
+
+@dataclass
+class TraceSource:
+    """Replays a recorded (rounds, n) delay matrix (App. J reference profile)."""
+
+    delays: np.ndarray
+
+    def sample_delays(self, rounds: int) -> np.ndarray:
+        if rounds > self.delays.shape[0]:
+            reps = -(-rounds // self.delays.shape[0])
+            return np.tile(self.delays, (reps, 1))[:rounds]
+        return self.delays[:rounds]
+
+
+def fit_gilbert_elliot(pattern: np.ndarray) -> dict:
+    """MLE fit of the 2-state GE chain to an observed straggler pattern
+    (App. C: the GE model tracks worker state transitions).
+
+    pattern: bool (rounds, n).  Returns {p_ns, p_sn, stationary,
+    mean_burst} — transition MLEs are simple count ratios.
+    """
+    pat = np.asarray(pattern, dtype=bool)
+    prev, nxt = pat[:-1], pat[1:]
+    n_to_s = int((~prev & nxt).sum())
+    n_stay = int((~prev & ~nxt).sum())
+    s_to_n = int((prev & ~nxt).sum())
+    s_stay = int((prev & nxt).sum())
+    p_ns = n_to_s / max(n_to_s + n_stay, 1)
+    p_sn = s_to_n / max(s_to_n + s_stay, 1)
+    stationary = p_ns / max(p_ns + p_sn, 1e-12)
+    return {
+        "p_ns": p_ns,
+        "p_sn": p_sn,
+        "stationary": stationary,
+        "mean_burst": 1.0 / max(p_sn, 1e-12),
+    }
+
+
+def suggest_parameters(pattern: np.ndarray, *, quantile: float = 0.95) -> dict:
+    """Design-model parameters implied by an observed pattern: smallest
+    B covering the burst-length quantile, and per-window distinct
+    straggler counts for candidate W (how the paper's Remark-J.1 rule of
+    thumb is grounded in data)."""
+    pat = np.asarray(pattern, dtype=bool)
+    bursts = []
+    for i in range(pat.shape[1]):
+        run = 0
+        for t in range(pat.shape[0]):
+            if pat[t, i]:
+                run += 1
+            elif run:
+                bursts.append(run)
+                run = 0
+        if run:
+            bursts.append(run)
+    bursts = np.asarray(bursts) if bursts else np.asarray([0])
+    B = int(np.quantile(bursts, quantile)) or 1
+    lam_by_W = {}
+    for W in (B + 1, 2 * B + 1, 3 * B + 1):
+        counts = [
+            int(pat[j : j + W].any(axis=0).sum())
+            for j in range(max(pat.shape[0] - W + 1, 1))
+        ]
+        lam_by_W[W] = int(np.quantile(counts, quantile))
+    return {"B": B, "lam_by_W": lam_by_W, "burst_q": float(np.quantile(bursts, quantile))}

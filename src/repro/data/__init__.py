@@ -1,0 +1,13 @@
+from .synthetic import (
+    chunk_boundaries,
+    classification_batch,
+    gc_chunked_batch,
+    token_batch,
+)
+
+__all__ = [
+    "token_batch",
+    "classification_batch",
+    "gc_chunked_batch",
+    "chunk_boundaries",
+]

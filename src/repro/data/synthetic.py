@@ -1,0 +1,88 @@
+"""Synthetic data pipelines.
+
+Two generators:
+  * ``token_batch``         — language-model token streams (per-arch smoke,
+    examples, coded LM training),
+  * ``classification_batch``— MNIST-like vectors + labels for the paper's
+    multi-model classifier experiment (§4.2 analogue).
+
+And the gradient-coding data plumbing:
+  * ``chunk_boundaries``    — split ``d`` examples into (possibly
+    unequal) chunks by fractional sizes (M-SGC's D1/D2 layout),
+  * ``gc_chunked_batch``    — build the (n, s+1, chunk_bs, ...) cyclic
+    replicated view consumed by the jitted coded train step.
+
+All generators are stateless: batch for job-t is a pure function of
+(seed, job), so every worker that computes chunk-c of job-t sees the
+same examples — required for GC decode exactness.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+
+def token_batch(seed: int, job: int, batch: int, seq: int, vocab: int):
+    """Deterministic (batch, seq) int32 tokens + next-token labels."""
+    key = jax.random.fold_in(jax.random.PRNGKey(seed), job)
+    toks = jax.random.randint(key, (batch, seq + 1), 0, vocab, dtype=jnp.int32)
+    return {"tokens": toks[:, :-1], "labels": toks[:, :-1]}
+
+
+def classification_batch(seed: int, job: int, batch: int, dim: int = 64,
+                         classes: int = 10):
+    """Separable synthetic classification data (so training visibly
+    converges): class-dependent means + noise."""
+    rng = np.random.default_rng(seed * 100_003 + job)
+    labels = rng.integers(0, classes, batch)
+    protos = np.random.default_rng(seed).standard_normal((classes, dim)) * 2.0
+    x = protos[labels] + rng.standard_normal((batch, dim))
+    return (
+        jnp.asarray(x, jnp.float32),
+        jnp.asarray(labels, jnp.int32),
+    )
+
+
+def chunk_boundaries(d: int, fractions) -> list[tuple[int, int]]:
+    """Integer [start, end) ranges approximating the given fractions.
+
+    Guarantees a full partition of ``d`` (last chunk absorbs rounding)
+    and at least 1 example per chunk when d >= num chunks.
+    """
+    fractions = np.asarray(fractions, dtype=np.float64)
+    fractions = fractions / fractions.sum()
+    sizes = np.maximum(np.round(fractions * d).astype(int), 1)
+    # fix rounding drift
+    while sizes.sum() > d:
+        sizes[np.argmax(sizes)] -= 1
+    sizes[-1] += d - sizes.sum()
+    bounds, off = [], 0
+    for s in sizes:
+        bounds.append((off, off + int(s)))
+        off += int(s)
+    assert off == d
+    return bounds
+
+
+def gc_chunked_batch(batch_pytree, n: int, s: int):
+    """Cyclic (n, s+1) replicated chunk view for the coded train step.
+
+    Splits the leading batch axis into ``n`` equal chunks and gathers
+    chunk ``(i + j) % n`` into slot (i, j) — worker-i's (s+1) assigned
+    chunks under the §3.1 placement.  Returns a pytree with leaves of
+    shape (n, s+1, chunk_bs, ...).
+    """
+    idx = (np.arange(n)[:, None] + np.arange(s + 1)[None, :]) % n  # (n, s+1)
+    idx = jnp.asarray(idx)
+
+    def g(leaf):
+        b = leaf.shape[0]
+        if b % n:
+            raise ValueError(f"batch {b} not divisible by n={n}")
+        chunks = leaf.reshape(n, b // n, *leaf.shape[1:])
+        return chunks[idx]  # (n, s+1, cb, ...)
+
+    return jax.tree.map(g, batch_pytree)

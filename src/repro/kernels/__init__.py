@@ -1,0 +1,21 @@
+"""Pallas TPU kernels for the perf-critical compute hot-spots.
+
+Each kernel package ships three files:
+  * ``<name>.py`` — the ``pl.pallas_call`` kernel with explicit
+    BlockSpec VMEM tiling (TPU is the target; ``interpret=True``
+    validates on CPU),
+  * ``ops.py``    — jit'd public wrapper with shape/dtype plumbing,
+  * ``ref.py``    — pure-jnp oracle used by the allclose test sweeps.
+
+Kernels:
+  * ``gc_coding``       — coded combine: the (s+1)-way coefficient
+    reduction of chunk gradients (GC encode) and survivor-weighted
+    reduction (decode).  The paper's only added compute vs uncoded SGD.
+  * ``rmsnorm``         — fused RMSNorm (bandwidth-bound).
+  * ``flash_attention`` — blocked GQA attention w/ causal + sliding
+    window masks (dominates every assigned arch's FLOPs).
+  * ``ssd_scan``        — Mamba2 SSD intra-chunk block (the ssm/hybrid
+    archs' compute hot-spot).
+"""
+
+from . import flash_attention, gc_coding, rmsnorm, ssd_scan  # noqa: F401

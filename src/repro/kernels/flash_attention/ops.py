@@ -1,0 +1,48 @@
+"""Public attention op: pads ragged sequence lengths to block multiples,
+falls back to the jnp reference for tiny shapes (smoke configs) where
+kernel blocking constraints don't hold."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .flash_attention import flash_attention as _kernel
+
+_MIN_BLOCK = 128
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "window", "interpret", "force_kernel")
+)
+def attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    interpret: bool = False,
+    force_kernel: bool = False,
+) -> jax.Array:
+    b, hq, sq, dh = q.shape
+    sk = k.shape[2]
+    if not force_kernel and (sq < _MIN_BLOCK or sk < _MIN_BLOCK):
+        return ref.attention(q, k, v, causal=causal, window=window)
+
+    pad_q = (-sq) % _MIN_BLOCK
+    pad_k = (-sk) % _MIN_BLOCK
+    if pad_q or pad_k:
+        qp = jnp.pad(q, ((0, 0), (0, 0), (0, pad_q), (0, 0)))
+        kp = jnp.pad(k, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+        vp = jnp.pad(v, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+        # valid_k masks padded key columns out of the softmax
+        out = _kernel(
+            qp, kp, vp, causal=causal, window=window, valid_k=sk,
+            interpret=interpret,
+        )
+        return out[:, :, :sq]
+    return _kernel(q, k, v, causal=causal, window=window, interpret=interpret)

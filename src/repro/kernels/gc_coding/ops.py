@@ -1,0 +1,63 @@
+"""Public jit'd wrappers around the coded-combine Pallas kernel.
+
+Handles ragged gradient sizes (pad to lane multiple), dtype plumbing,
+and whole-pytree combines (flatten leaves into one streamed buffer so
+small leaves don't pay per-kernel launch overhead).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .gc_coding import DEFAULT_BLOCK_D, coded_combine as _kernel
+
+_LANE = 128
+
+
+def _pick_block(d_pad: int) -> int:
+    b = min(DEFAULT_BLOCK_D, d_pad)
+    while d_pad % b != 0:
+        b -= _LANE
+    return max(b, _LANE)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def coded_combine(parts: jax.Array, weights: jax.Array, *, interpret: bool = False):
+    """weights @ parts for (k, D) stacked flat gradients, any D."""
+    k, d = parts.shape
+    d_pad = -(-d // _LANE) * _LANE
+    padded = jnp.pad(parts, ((0, 0), (0, d_pad - d)))
+    out = _kernel(
+        padded, weights.astype(jnp.float32),
+        block_d=_pick_block(d_pad), interpret=interpret,
+    )
+    return out[:d]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def coded_combine_tree(tree, weights: jax.Array, *, interpret: bool = False):
+    """Combine a pytree whose leaves are stacked on a leading k axis.
+
+    tree leaves: (k, ...) -> returns leaves (...).  All leaves are
+    raveled and concatenated into one (k, D_total) buffer so the kernel
+    makes a single fused pass over the whole gradient.
+    """
+    leaves, treedef = jax.tree.flatten(tree)
+    k = leaves[0].shape[0]
+    sizes = [leaf[0].size for leaf in leaves]
+    dtypes = [leaf.dtype for leaf in leaves]
+    wide = jnp.result_type(*dtypes)
+    flat = jnp.concatenate(
+        [leaf.astype(wide).reshape(k, -1) for leaf in leaves], axis=1
+    )
+    combined = coded_combine(flat, weights, interpret=interpret)
+    out, off = [], 0
+    for leaf, size in zip(leaves, sizes):
+        out.append(
+            combined[off : off + size].reshape(leaf.shape[1:]).astype(leaf.dtype)
+        )
+        off += size
+    return jax.tree.unflatten(treedef, out)

@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for the coded-combine kernel."""
+
+import jax
+import jax.numpy as jnp
+
+
+def coded_combine(parts: jax.Array, weights: jax.Array) -> jax.Array:
+    """weights @ parts computed in f32, cast back to parts.dtype."""
+    acc = jnp.einsum(
+        "k,kd->d",
+        weights.astype(jnp.float32),
+        parts.astype(jnp.float32),
+    )
+    return acc.astype(parts.dtype)
+
+
+def coded_combine_tree(tree, weights):
+    """Oracle for the pytree wrapper: combine leaf-wise."""
+    return jax.tree.map(
+        lambda leaf: jnp.einsum(
+            "k,k...->...",
+            weights.astype(jnp.float32),
+            leaf.astype(jnp.float32),
+        ).astype(leaf.dtype),
+        tree,
+    )

@@ -1,0 +1,2 @@
+from . import ops, ref  # noqa: F401
+from .ops import rmsnorm  # noqa: F401

@@ -1,0 +1,17 @@
+"""Public wrapper: accepts any (..., d) shape, flattens leading dims."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from .rmsnorm import rmsnorm as _kernel
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "interpret"))
+def rmsnorm(x: jax.Array, gamma: jax.Array, *, eps: float = 1e-6,
+            interpret: bool = False) -> jax.Array:
+    shape = x.shape
+    y = _kernel(x.reshape(-1, shape[-1]), gamma, eps=eps, interpret=interpret)
+    return y.reshape(shape)

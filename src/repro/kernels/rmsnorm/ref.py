@@ -1,0 +1,11 @@
+"""Pure-jnp oracle for fused RMSNorm."""
+
+import jax
+import jax.numpy as jnp
+
+
+def rmsnorm(x: jax.Array, gamma: jax.Array, *, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    ms = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(ms + eps) * gamma.astype(jnp.float32)
+    return y.astype(x.dtype)

@@ -1,0 +1,24 @@
+"""Public wrapper: reshapes the (b, nc, ...) chunked layout used by
+``models.ssm.ssd_chunked`` into the kernel's flattened (b*nc, ...) grid."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from .ssd_scan import ssd_intra_chunk as _kernel
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def ssd_intra_chunk(xc, dtc, cum, Bc, Cc, *, interpret: bool = False):
+    """Chunked layout: xc (b, nc, Q, nh, hd); dtc/cum (b, nc, Q, nh);
+    Bc/Cc (b, nc, Q, st).  Returns y_intra (b, nc, Q, nh, hd) f32."""
+    b, nc, Q, nh, hd = xc.shape
+    st = Bc.shape[-1]
+    flat = lambda a: a.reshape((b * nc,) + a.shape[2:])  # noqa: E731
+    y = _kernel(
+        flat(xc), flat(dtc), flat(cum), flat(Bc), flat(Cc),
+        interpret=interpret,
+    )
+    return y.reshape(b, nc, Q, nh, hd)

@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for the SSD intra-chunk kernel."""
+
+import jax.numpy as jnp
+
+
+def ssd_intra_chunk(x, dt, cum, B, C):
+    """x (bc,Q,nh,hd); dt/cum (bc,Q,nh); B/C (bc,Q,st) -> (bc,Q,nh,hd)."""
+    Q = x.shape[1]
+    scores = jnp.einsum(
+        "bqs,bus->bqu", C.astype(jnp.float32), B.astype(jnp.float32)
+    )
+    decay = jnp.exp(cum[:, :, None, :] - cum[:, None, :, :])  # (bc,Q,Q,nh)
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    w = jnp.where(
+        mask[None, :, :, None], scores[..., None] * decay, 0.0
+    )
+    xdt = x.astype(jnp.float32) * dt[..., None].astype(jnp.float32)
+    return jnp.einsum("bqun,bunh->bqnh", w, xdt)

@@ -1,0 +1,85 @@
+"""Pallas TPU kernel: Mamba2 SSD intra-chunk block.
+
+The chunked SSD algorithm (arXiv:2405.21060) splits the sequence into
+chunks of length Q.  The *intra-chunk* part — the compute hot-spot —
+is, per (batch, chunk):
+
+    scores[q, u] = C_q . B_u                        (MXU, Q x Q)
+    w[q, u, n]   = scores[q, u] * exp(cum[q, n] - cum[u, n]) * (q >= u)
+    y[q, n, h]   = sum_u w[q, u, n] * dt[u, n] * x[u, n, h]
+
+The TPU adaptation vs the CUDA reference: we tile (batch*chunk) on the
+grid and keep a whole Q x Q score tile resident in VMEM (Q = 64..128 is
+MXU-shaped); the per-head decay modulation runs on the VPU between the
+two MXU contractions, head-by-head via a fori_loop so the VMEM working
+set stays at Q*Q + Q*max(hd, st) f32 per head rather than Q*Q*nh.
+
+The inter-chunk recurrence (tiny, O(nh*hd*st) per chunk) stays in jnp
+(``models.ssm``) — it is latency- not throughput-bound.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _intra_kernel(x_ref, dt_ref, cum_ref, b_ref, c_ref, o_ref, *, nh: int):
+    # blocks: x (1, Q, nh, hd); dt/cum (1, Q, nh); B/C (1, Q, st)
+    Q = x_ref.shape[1]
+    scores = jax.lax.dot_general(
+        c_ref[0].astype(jnp.float32), b_ref[0].astype(jnp.float32),
+        (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32,
+    )  # (Q, Q): C_q . B_u
+    qpos = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 0)
+    upos = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 1)
+    causal = qpos >= upos
+
+    def per_head(h, _):
+        cum_h = cum_ref[0, :, h].astype(jnp.float32)        # (Q,)
+        dt_h = dt_ref[0, :, h].astype(jnp.float32)          # (Q,)
+        decay = jnp.exp(cum_h[:, None] - cum_h[None, :])    # (Q, Q)
+        w = jnp.where(causal, scores * decay, 0.0)
+        xdt = x_ref[0, :, h, :].astype(jnp.float32) * dt_h[:, None]  # (Q, hd)
+        y_h = jax.lax.dot_general(
+            w, xdt, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )  # (Q, hd)
+        o_ref[0, :, h, :] = y_h.astype(o_ref.dtype)
+        return 0
+
+    jax.lax.fori_loop(0, nh, per_head, 0)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def ssd_intra_chunk(
+    x: jax.Array,     # (bc, Q, nh, hd)  — batch*chunks flattened
+    dt: jax.Array,    # (bc, Q, nh)      — softplus'd step sizes
+    cum: jax.Array,   # (bc, Q, nh)      — within-chunk cumsum of dt*A
+    B: jax.Array,     # (bc, Q, st)
+    C: jax.Array,     # (bc, Q, st)
+    *,
+    interpret: bool = False,
+) -> jax.Array:
+    """Intra-chunk SSD output y (bc, Q, nh, hd), f32."""
+    bc, Q, nh, hd = x.shape
+    st = B.shape[-1]
+    kernel = functools.partial(_intra_kernel, nh=nh)
+    return pl.pallas_call(
+        kernel,
+        grid=(bc,),
+        in_specs=[
+            pl.BlockSpec((1, Q, nh, hd), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((1, Q, nh), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, Q, nh), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, Q, st), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, Q, st), lambda i: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, Q, nh, hd), lambda i: (i, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((bc, Q, nh, hd), jnp.float32),
+        interpret=interpret,
+        name="ssd_intra_chunk",
+    )(x, dt, cum, B, C)

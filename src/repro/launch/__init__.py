@@ -1,0 +1,9 @@
+"""Launchers: mesh construction, multi-pod dry-run, train/serve CLIs.
+
+NOTE: ``dryrun`` is intentionally not imported here — it sets XLA_FLAGS
+at module import and must only run as ``python -m repro.launch.dryrun``.
+"""
+
+from .mesh import make_cpu_mesh, make_production_mesh
+
+__all__ = ["make_production_mesh", "make_cpu_mesh"]

@@ -1,0 +1,297 @@
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run driver (deliverable e).
+
+Lowers + compiles every (architecture x input-shape) pair against the
+production meshes — 16x16 = 256 chips single-pod and 2x16x16 = 512
+chips multi-pod — using ShapeDtypeStruct stand-ins (no allocation), and
+records ``memory_analysis()`` / ``cost_analysis()`` plus the collective
+byte census parsed from the compiled HLO for §Roofline.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch llama3.2-1b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--coded]
+  PYTHONPATH=src python -m repro.launch.dryrun --all --out experiments/dryrun
+
+``--coded`` additionally lowers the GC-coded train step (the paper's
+technique on the production mesh) for train shapes.
+
+The XLA_FLAGS line above MUST stay the first statement: jax locks the
+device count on first init.  Do not import this module from tests.
+"""
+
+import argparse
+import json
+import re
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCHS, SHAPES, get_config, input_specs, skip_reason
+from repro.launch.mesh import make_production_mesh
+from repro.launch.sharding import (
+    batch_shardings,
+    cache_shardings,
+    opt_shardings,
+    params_shardings,
+    replicated,
+)
+from repro.models import init_params, loss_fn
+from repro.optim import adamw_init
+from repro.train.coded import (
+    make_coded_train_step,
+    make_serve_step,
+    make_train_step,
+)
+
+from repro.launch.hlo_census import collective_census  # noqa: E402
+
+# -- dry-run of one (arch, shape, mesh) ---------------------------------------
+
+
+def lower_pair(cfg, shape_name: str, mesh, *, coded: bool | str = False,
+               with_opt: bool = True, profile: str = "tp",
+               cache_mode: str = "auto"):
+    """Lower one (arch, shape) step on ``mesh``. Raises on sharding bugs.
+
+    coded: False -> plain train step; "gc" / True -> (n, s=15/256-load)
+    GC-coded step (Table-1 operating point); "msgc" -> the lambda=n,
+    B=1, W=2 M-SGC steady-state round (Remark 3.2 / Example F.1):
+    2 chunk slots per worker at load 2/n — the paper's headline load
+    reduction, visible directly in the roofline compute term.
+    """
+    shape = SHAPES[shape_name]
+    specs = input_specs(cfg, shape)
+    params_shape = jax.eval_shape(lambda: init_params(cfg, jax.random.PRNGKey(0)))
+    p_shard = params_shardings(cfg, params_shape, mesh)
+
+    with mesh:
+        if shape.mode in ("train", "prefill"):
+            b_shard = batch_shardings(cfg, specs["batch"], mesh, profile=profile)
+            if shape.mode == "prefill":
+                def fwd(p, b):
+                    from repro.models import forward
+
+                    logits, _ = forward(p, cfg, b)
+                    return logits
+                j = jax.jit(
+                    fwd, in_shardings=(p_shard, b_shard),
+                    out_shardings=batch_shardings(
+                        cfg, jax.eval_shape(fwd, params_shape, specs["batch"]),
+                        mesh,
+                    ),
+                )
+                return j.lower(params_shape, specs["batch"])
+            if coded:
+                # Coded train step with the paper's n=256 logical
+                # workers (matching the Lambda cluster), sharded over
+                # the mesh data axes (16 logical workers per device
+                # column).  "gc": Table-1 operating point s=15, load
+                # (s+1)/n = 0.0625; "msgc": the lambda=n M-SGC round
+                # (2 slots/worker, load 2/n — Remark 3.2/3.3).
+                n = min(256, shape.global_batch)
+                if coded == "msgc":
+                    s = 1  # slots: own chunk + one re-attempt
+                else:
+                    s = max(1, round(0.0625 * n) - 1)  # s=15 at n=256
+                cb = shape.global_batch // n
+                coded_batch = jax.tree.map(
+                    lambda l: jax.ShapeDtypeStruct(
+                        (n, s + 1, cb) + l.shape[1:], l.dtype
+                    ),
+                    specs["batch"],
+                )
+                w_shape = jax.ShapeDtypeStruct((n, s + 1), jnp.float32)
+                cb_shard = batch_shardings(cfg, coded_batch, mesh,
+                                           profile=profile)
+                opt_shape = jax.eval_shape(lambda: adamw_init(params_shape))
+                o_shard = opt_shardings(cfg, opt_shape, mesh, p_shard)
+                step = make_coded_train_step(cfg, n, s)
+                j = jax.jit(
+                    step,
+                    in_shardings=(p_shard, o_shard, cb_shard, replicated(mesh)),
+                    out_shardings=(p_shard, o_shard, replicated(mesh)),
+                )
+                return j.lower(params_shape, opt_shape, coded_batch, w_shape)
+            if with_opt:
+                opt_shape = jax.eval_shape(lambda: adamw_init(params_shape))
+                o_shard = opt_shardings(cfg, opt_shape, mesh, p_shard)
+                step = make_train_step(cfg)
+                j = jax.jit(
+                    step,
+                    in_shardings=(p_shard, o_shard, b_shard),
+                    out_shardings=(p_shard, o_shard, replicated(mesh)),
+                )
+                return j.lower(params_shape, opt_shape, specs["batch"])
+            grad_fn = lambda p, b: jax.grad(  # noqa: E731
+                lambda pp: loss_fn(pp, cfg, b)
+            )(p)
+            j = jax.jit(grad_fn, in_shardings=(p_shard, b_shard),
+                        out_shardings=p_shard)
+            return j.lower(params_shape, specs["batch"])
+
+        # decode
+        c_shard = cache_shardings(cfg, specs["cache"], mesh,
+                                  mode=cache_mode)
+        tok_shard = batch_shardings(cfg, {"t": specs["token"]}, mesh)["t"]
+        st = make_serve_step(cfg)
+        j = jax.jit(
+            st,
+            in_shardings=(p_shard, c_shard, tok_shard, replicated(mesh)),
+            out_shardings=(replicated(mesh), c_shard),
+        )
+        return j.lower(
+            params_shape, specs["cache"], specs["token"], specs["pos"]
+        )
+
+
+def _num_workers(mesh) -> int:
+    n = 1
+    for a in ("pod", "data"):
+        if a in mesh.axis_names:
+            n *= mesh.shape[a]
+    return n
+
+
+def run_pair(arch: str, shape_name: str, *, multi_pod: bool = False,
+             coded: bool | str = False, out_dir: str | None = None,
+             verbose: bool = True, cfg=None, tag: str = "",
+             profile: str = "tp", cache_mode: str = "auto") -> dict:
+    cfg = cfg if cfg is not None else get_config(arch)
+    shape = SHAPES[shape_name]
+    reason = skip_reason(cfg, shape)
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    record = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": mesh_name,
+        "coded": coded,
+        "tag": tag,
+        "status": "skip" if reason else "ok",
+        "skip_reason": reason,
+    }
+    if reason:
+        if verbose:
+            print(f"[dryrun] {arch:16s} {shape_name:12s} {mesh_name:8s} "
+                  f"SKIP: {reason}")
+        _dump(record, out_dir)
+        return record
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    lowered = lower_pair(cfg, shape_name, mesh, coded=coded,
+                         profile=profile, cache_mode=cache_mode)
+    t1 = time.time()
+    compiled = lowered.compile()
+    t2 = time.time()
+
+    ma = compiled.memory_analysis()
+    ca = compiled.cost_analysis() or {}
+    census = collective_census(compiled.as_text())
+    ndev = mesh.size
+
+    # True whole-program FLOPs/bytes: lower an unrolled twin (tracing
+    # only, no compile) — XLA's cost analysis counts while bodies once,
+    # so the scanned module under-reports by ~num_layers.
+    unrolled = {}
+    try:
+        lo_u = lower_pair(
+            cfg.replace(scan_unroll=True), shape_name, mesh, coded=coded,
+            profile=profile, cache_mode=cache_mode,
+        )
+        ca_u = lo_u.cost_analysis() or {}
+        unrolled = {
+            "flops_total": ca_u.get("flops", 0.0),
+            "bytes_total": ca_u.get("bytes accessed", 0.0),
+        }
+    except Exception as e:  # noqa: BLE001
+        unrolled = {"error": repr(e)}
+
+    record.update(
+        {
+            "lower_s": round(t1 - t0, 2),
+            "compile_s": round(t2 - t1, 2),
+            "num_devices": ndev,
+            "flops_per_device_scanned": ca.get("flops", 0.0),
+            "bytes_per_device_scanned": ca.get("bytes accessed", 0.0),
+            "flops_per_device": unrolled.get("flops_total", 0.0) / ndev
+            if "flops_total" in unrolled
+            else ca.get("flops", 0.0),
+            "bytes_per_device": unrolled.get("bytes_total", 0.0) / ndev
+            if "bytes_total" in unrolled
+            else ca.get("bytes accessed", 0.0),
+            "unrolled": unrolled,
+            "memory": {
+                "argument_bytes": ma.argument_size_in_bytes,
+                "output_bytes": ma.output_size_in_bytes,
+                "temp_bytes": ma.temp_size_in_bytes,
+            },
+            "collectives": census,
+            "param_count": cfg.param_count(),
+            "active_param_count": cfg.param_count(active_only=True),
+        }
+    )
+    if verbose:
+        print(
+            f"[dryrun] {arch:16s} {shape_name:12s} {mesh_name:8s} "
+            f"compile {record['compile_s']:6.1f}s  "
+            f"flops/dev {record['flops_per_device']:.3e}  "
+            f"coll {census.get('total_bytes', 0)/2**30:.2f} GiB"
+        )
+    _dump(record, out_dir)
+    return record
+
+
+def _dump(record: dict, out_dir: str | None):
+    if not out_dir:
+        return
+    os.makedirs(out_dir, exist_ok=True)
+    coded = record.get("coded")
+    suffix = "" if not coded else ("_coded" if coded is True or coded == "gc"
+                                   else f"_coded-{coded}")
+    if record.get("tag"):
+        suffix += f"_{record['tag']}"
+    name = f"{record['arch']}_{record['shape']}_{record['mesh']}{suffix}.json"
+    with open(os.path.join(out_dir, name.replace("/", "-")), "w") as f:
+        json.dump(record, f, indent=2)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", choices=ARCHS)
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--coded", action="store_true",
+                    help="also lower the GC-coded train step")
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args()
+
+    pairs = (
+        [(a, s) for a in ARCHS for s in SHAPES]
+        if args.all
+        else [(args.arch, args.shape)]
+    )
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    failures = []
+    for arch, shape in pairs:
+        for mp in meshes:
+            try:
+                run_pair(arch, shape, multi_pod=mp, out_dir=args.out)
+                if args.coded and SHAPES[shape].mode == "train":
+                    run_pair(arch, shape, multi_pod=mp, coded=True,
+                             out_dir=args.out)
+            except Exception as e:  # noqa: BLE001
+                failures.append((arch, shape, mp, repr(e)))
+                print(f"[dryrun] FAIL {arch} {shape} multi_pod={mp}: {e}")
+    if failures:
+        raise SystemExit(f"{len(failures)} dry-run failures: {failures}")
+    print("[dryrun] all pairs lowered + compiled OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,147 @@
+"""HLO collective census (side-effect-free; importable from tests).
+
+Parses the compiled per-device SPMD module text, builds the computation
+call graph (while bodies with their known_trip_count, calls, fusions,
+conditionals), and sums collective result bytes weighted by the product
+of enclosing loop trip counts.
+"""
+
+from __future__ import annotations
+
+import re
+
+# -- HLO collective census ----------------------------------------------------
+#
+# The compiled module is the per-device SPMD program, so collective
+# operand bytes are per-chip.  BUT a `lax.scan` lowers to a while loop
+# whose body appears ONCE in the HLO text — collectives inside it run
+# trip-count times per step.  The census therefore walks the
+# computation call graph (ENTRY -> while bodies -> nested bodies) and
+# multiplies each computation's collectives by the product of enclosing
+# trip counts, which we know exactly from the model config (num_layers,
+# or (groups, attn_every) for the nested hybrid scan).
+
+_COLLECTIVE_RE = re.compile(
+    r"=\s+(\S+)\s+(all-gather|all-reduce|reduce-scatter|"
+    r"all-to-all|collective-permute)\("
+)
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+# computation headers start at column 0 and end with "{"; params may be
+# tuple-typed (nested parens), so match the whole line
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s+\(.*\{\s*$", re.M)
+_CALLEE_RE = re.compile(
+    r"(?:body=|to_apply=|condition=)%?([\w.\-]+)"
+)
+_WHILE_BODY_RE = re.compile(r"while\(.*body=%?([\w.\-]+)", re.S)
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+}
+
+
+def _shape_bytes(type_str: str) -> int:
+    """Bytes of an HLO result type (sums tuple elements)."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _split_computations(hlo_text: str) -> dict[str, str]:
+    """computation name -> body text."""
+    comps = {}
+    starts = [
+        (m.start(), m.group(1)) for m in _COMP_RE.finditer(hlo_text)
+    ]
+    for (pos, name), nxt in zip(starts, starts[1:] + [(len(hlo_text), "")]):
+        comps[name] = hlo_text[pos : nxt[0]]
+    return comps
+
+
+def _entry_name(hlo_text: str) -> str | None:
+    m = re.search(r"^ENTRY %?([\w.\-]+) ", hlo_text, re.M)
+    return m.group(1) if m else None
+
+
+_WHILE_INSTR_RE = re.compile(
+    r"while\(%[\w.\-]+\),\s*condition=%([\w.\-]+),\s*body=%([\w.\-]+)"
+    r"(?:[^\n]*?\"known_trip_count\":\{\"n\":\"(\d+)\"\})?"
+)
+_CALL_RE = re.compile(r"(?:calls=|to_apply=)%?([\w.\-]+)")
+_BRANCH_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+
+
+def collective_census(hlo_text: str) -> dict:
+    """Trip-count-weighted per-device collective byte census.
+
+    ``lax.scan`` lowers to a while loop whose body appears once in the
+    HLO but executes trip-count times; XLA records the trip count in
+    ``backend_config known_trip_count``.  We build the computation call
+    graph (whiles, calls, fusions, conditionals), weight every
+    computation by the product of enclosing trip counts along its call
+    chains, and sum collective result bytes with those weights.
+    """
+    comps = _split_computations(hlo_text)
+    entry = _entry_name(hlo_text)
+
+    edges: dict[str, list[tuple[str, float]]] = {name: [] for name in comps}
+    for name, body in comps.items():
+        for cond, wbody, trip in _WHILE_INSTR_RE.findall(body):
+            n = float(trip) if trip else 1.0
+            edges[name].append((wbody, n))
+        for callee in _CALL_RE.findall(body):
+            if callee in comps:
+                edges[name].append((callee, 1.0))
+        for bm in _BRANCH_RE.finditer(body):
+            for callee in re.findall(r"%?([\w.\-]+)", bm.group(1)):
+                if callee in comps:
+                    edges[name].append((callee, 1.0))
+
+    # accumulate multipliers over the DAG (DFS with cycle guard)
+    mult: dict[str, float] = {name: 0.0 for name in comps}
+    if entry in comps:
+        mult[entry] = 1.0
+        stack = [entry]
+        # topological-ish relaxation; the computation graph is a DAG
+        order = []
+        seen = set()
+
+        def dfs(u):
+            if u in seen:
+                return
+            seen.add(u)
+            for v, _ in edges.get(u, ()):
+                dfs(v)
+            order.append(u)
+
+        dfs(entry)
+        for u in reversed(order):
+            for v, w in edges.get(u, ()):
+                mult[v] += mult[u] * w
+
+    census: dict[str, dict] = {}
+    raw_total = 0
+    for name, body in comps.items():
+        m_here = mult.get(name, 1.0) or 1.0
+        for cm in _COLLECTIVE_RE.finditer(body):
+            type_str, kind = cm.groups()
+            b = _shape_bytes(type_str)
+            raw_total += b
+            entry_d = census.setdefault(kind, {"count": 0, "bytes": 0})
+            entry_d["count"] += 1
+            entry_d["bytes"] += int(b * m_here)
+    census["total_bytes"] = sum(
+        v["bytes"] for k, v in census.items() if isinstance(v, dict)
+    )
+    census["raw_body_once_bytes"] = raw_total
+    return census
+
+

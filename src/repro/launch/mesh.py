@@ -1,0 +1,56 @@
+"""Production mesh builders.
+
+Defined as FUNCTIONS so importing this module never touches jax device
+state (the dry-run sets XLA_FLAGS before any jax initialization).
+
+Target: TPU v5e pods — 256 chips per pod (16 x 16), 2 pods for the
+multi-pod dry-run.  Axes: "data" carries the gradient-coding worker
+axis (batch + coded chunks), "model" carries tensor parallelism,
+"pod" is the outer data-parallel axis across pods.
+"""
+
+from __future__ import annotations
+
+import jax
+
+SINGLE_POD = (16, 16)
+MULTI_POD = (2, 16, 16)
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = MULTI_POD if multi_pod else SINGLE_POD
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    ndev = 1
+    for s in shape:
+        ndev *= s
+    devices = jax.devices()[:ndev]
+    if len(devices) < ndev:
+        raise RuntimeError(
+            f"mesh {shape} needs {ndev} devices, have {len(devices)} — "
+            "the dry-run must set xla_force_host_platform_device_count "
+            "before importing jax"
+        )
+    import numpy as np
+
+    return jax.sharding.Mesh(
+        np.asarray(devices).reshape(shape), axes
+    )
+
+
+def make_cpu_mesh(n_data: int = 1, n_model: int = 1):
+    """Tiny mesh over real local devices (tests / examples)."""
+    import numpy as np
+
+    devices = jax.devices()[: n_data * n_model]
+    return jax.sharding.Mesh(
+        np.asarray(devices).reshape(n_data, n_model), ("data", "model")
+    )
+
+
+def data_axes(mesh) -> tuple[str, ...]:
+    """Axes that carry the batch / GC-worker dimension."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def model_axis(mesh) -> str | None:
+    return "model" if "model" in mesh.axis_names else None

@@ -1,0 +1,151 @@
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""§Perf hillclimbing driver.
+
+Runs the three selected (arch x shape) pairs through their iteration
+variants (sharding profile, cache layout, coded operating point,
+remat policy) and records each variant's dry-run artifact under a tag
+so ``benchmarks.roofline`` can diff the terms.
+
+  PYTHONPATH=src python -m repro.launch.perf --pair qwen05 --variant fsdp
+  PYTHONPATH=src python -m repro.launch.perf --all
+
+Pairs (chosen from the baseline table, EXPERIMENTS.md §Roofline):
+  qwen05   qwen2-0.5b   train_4k   — worst roofline fraction
+                                      (collective 7.95s vs compute 0.076s)
+  mixtral  mixtral-8x22b decode_32k + long_500k — most collective-bound
+                                      decode (cache resharding)
+  coded    llama3.2-1b  train_4k   — the paper's technique: GC (s=15)
+                                      baseline vs M-SGC (load 2/n) vs
+                                      M-SGC + fsdp (beyond-paper)
+"""
+
+import argparse
+
+from repro.configs import get_config
+from repro.launch.dryrun import run_pair
+
+OUT = "experiments/perf"
+
+
+def pair_qwen05(variants):
+    arch, shape = "qwen2-0.5b", "train_4k"
+    if "baseline" in variants:
+        run_pair(arch, shape, out_dir=OUT, tag="baseline")
+    if "fsdp" in variants:
+        run_pair(arch, shape, out_dir=OUT, tag="fsdp", profile="fsdp")
+    if "fsdp-act" in variants:
+        # iteration 2: pin activations batch-sharded so params (not
+        # activations) move — true FSDP
+        cfg = get_config(arch).replace(act_batch_axes=("data", "model"))
+        run_pair(arch, shape, out_dir=OUT, tag="fsdp-act", profile="fsdp",
+                 cfg=cfg)
+    if "fsdp-act-dots" in variants:
+        cfg = get_config(arch).replace(
+            act_batch_axes=("data", "model"), remat_policy="dots"
+        )
+        run_pair(arch, shape, out_dir=OUT, tag="fsdp-act-dots",
+                 profile="fsdp", cfg=cfg)
+
+
+def pair_mixtral(variants):
+    arch = "mixtral-8x22b"
+    for shape in ("decode_32k", "long_500k"):
+        if "baseline" in variants:
+            run_pair(arch, shape, out_dir=OUT, tag="baseline")
+        if "headdim" in variants:
+            run_pair(arch, shape, out_dir=OUT, tag="headdim",
+                     cache_mode="headdim")
+
+
+def pair_coded(variants):
+    arch, shape = "llama3.2-1b", "train_4k"
+    if "baseline" in variants:
+        run_pair(arch, shape, out_dir=OUT, coded="gc", tag="gc-baseline")
+    if "msgc" in variants:
+        run_pair(arch, shape, out_dir=OUT, coded="msgc", tag="msgc")
+    if "msgc-fsdp" in variants:
+        run_pair(arch, shape, out_dir=OUT, coded="msgc", tag="msgc-fsdp",
+                 profile="fsdp")
+    if "gc-fsdp" in variants:
+        run_pair(arch, shape, out_dir=OUT, coded="gc", tag="gc-fsdp",
+                 profile="fsdp")
+    if "msgc-act" in variants:
+        # beyond-paper: M-SGC operating point + FSDP activation pinning
+        cfg = get_config(arch).replace(act_batch_axes=("data", "model"))
+        run_pair(arch, shape, out_dir=OUT, coded="msgc", tag="msgc-act",
+                 profile="fsdp", cfg=cfg)
+    if "gc-act" in variants:
+        cfg = get_config(arch).replace(act_batch_axes=("data", "model"))
+        run_pair(arch, shape, out_dir=OUT, coded="gc", tag="gc-act",
+                 profile="fsdp", cfg=cfg)
+
+
+def pair_mamba(variants):
+    """Extension pair: mamba2 train_4k is collective-bound (activation
+    psums around the packed in/out projections)."""
+    arch, shape = "mamba2-1.3b", "train_4k"
+    if "baseline" in variants:
+        run_pair(arch, shape, out_dir=OUT, tag="baseline")
+    if "fsdp-act" in variants:
+        cfg = get_config(arch).replace(act_batch_axes=("data", "model"))
+        run_pair(arch, shape, out_dir=OUT, tag="fsdp-act", profile="fsdp",
+                 cfg=cfg)
+
+
+def pair_qwen72(variants):
+    """Extension pair: qwen2-72b train (compute/memory bound at scale)."""
+    arch, shape = "qwen2-72b", "train_4k"
+    if "baseline" in variants:
+        run_pair(arch, shape, out_dir=OUT, tag="baseline")
+    if "dots" in variants:
+        cfg = get_config(arch).replace(remat_policy="dots")
+        run_pair(arch, shape, out_dir=OUT, tag="dots", cfg=cfg)
+
+
+def pair_prefill(variants):
+    """Extension pair: qwen2-0.5b prefill_32k — worst collective outlier
+    (30 s of TP activation psums at 32k seq with batch 32 < mesh)."""
+    arch, shape = "qwen2-0.5b", "prefill_32k"
+    if "baseline" in variants:
+        run_pair(arch, shape, out_dir=OUT, tag="baseline")
+    if "seqpar" in variants:
+        # Megatron sequence parallelism: activations sharded over
+        # (batch=data, seq=model); per-layer collectives become small
+        # K/V all-gathers instead of full-hidden psums
+        cfg = get_config(arch).replace(
+            act_batch_axes=("data",), act_seq_axis="model"
+        )
+        run_pair(arch, shape, out_dir=OUT, tag="seqpar", cfg=cfg)
+
+
+PAIRS = {
+    "qwen72": (pair_qwen72, ["baseline", "dots"]),
+    "prefill": (pair_prefill, ["baseline", "seqpar"]),
+    "qwen05": (pair_qwen05,
+               ["baseline", "fsdp", "fsdp-act", "fsdp-act-dots"]),
+    "mixtral": (pair_mixtral, ["baseline", "headdim"]),
+    "coded": (pair_coded,
+              ["baseline", "msgc", "msgc-fsdp", "gc-fsdp", "msgc-act",
+               "gc-act"]),
+    "mamba": (pair_mamba, ["baseline", "fsdp-act"]),
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--pair", choices=list(PAIRS))
+    ap.add_argument("--variant", action="append", default=None)
+    ap.add_argument("--all", action="store_true")
+    args = ap.parse_args()
+
+    targets = list(PAIRS) if args.all else [args.pair]
+    for t in targets:
+        fn, default_variants = PAIRS[t]
+        fn(args.variant or default_variants)
+
+
+if __name__ == "__main__":
+    main()

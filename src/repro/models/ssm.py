@@ -1,0 +1,212 @@
+"""Mamba2 (SSD — state-space duality, arXiv:2405.21060) block.
+
+Chunked SSD algorithm, pure JAX (lowers on every backend, O(seq)):
+sequence is split into chunks of length Q; within a chunk the output is
+a (masked) quadratic form (the "attention side" of the duality); across
+chunks a recurrent state h of shape (heads, head_dim, d_state) is
+carried by a ``lax.scan`` (the "SSM side").  Single-token recurrence is
+``ssd_decode_step`` — O(1) per token, which is what makes the ssm /
+hybrid architectures eligible for the 500k-token decode shape.
+
+Simplifications vs the reference CUDA implementation (DESIGN.md §2):
+real-valued scalar-per-head A (as in Mamba2), grouped B/C shared across
+heads (n_groups=1), depthwise conv folded to a width-4 causal conv.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense_init, rmsnorm_apply, rmsnorm_init
+
+
+def ssm_init(key, cfg, dtype):
+    d = cfg.d_model
+    di = cfg.ssm_d_inner
+    st = cfg.ssm_state
+    nh = cfg.ssm_heads
+    ks = jax.random.split(key, 6)
+    conv_dim = di + 2 * st
+    return {
+        # in_proj emits [z (di), x (di), B (st), C (st), dt (nh)]
+        "in_proj": dense_init(ks[0], d, 2 * di + 2 * st + nh, dtype),
+        "conv_w": (jax.random.normal(ks[1], (4, conv_dim)) * 0.2).astype(dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "A_log": jnp.zeros((nh,), jnp.float32),       # A = -exp(A_log)
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "norm": rmsnorm_init(di, dtype),
+        "out_proj": dense_init(ks[2], di, d, dtype),
+    }
+
+
+def _causal_conv(x, w, b):
+    """x: (b, s, c); w: (k, c) depthwise; left-padded causal conv."""
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(xp[:, i : i + x.shape[1], :] * w[i] for i in range(k))
+    return out + b
+
+
+def _split_proj(cfg, proj):
+    di, st, nh = cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_heads
+    z = proj[..., :di]
+    xBC = proj[..., di : di + di + 2 * st]
+    dt = proj[..., di + di + 2 * st :]
+    return z, xBC, dt
+
+
+def ssd_chunked(x, dt, A, B, C, D, *, chunk: int, use_pallas: bool = False,
+                return_state: bool = False):
+    """Chunked SSD scan.
+
+    x:  (b, s, nh, hd)   inputs per head
+    dt: (b, s, nh)       softplus'd step sizes
+    A:  (nh,)            negative decay rates
+    B:  (b, s, st)       input projections (shared across heads)
+    C:  (b, s, st)       output projections
+    D:  (nh,)            skip
+    returns y: (b, s, nh, hd)
+    """
+    b, s, nh, hd = x.shape
+    st = B.shape[-1]
+    Q = min(chunk, s)
+    pad = (-s) % Q
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+    L = x.shape[1]
+    nc = L // Q
+
+    xc = x.reshape(b, nc, Q, nh, hd)
+    dtc = dt.reshape(b, nc, Q, nh)
+    Bc = B.reshape(b, nc, Q, st)
+    Cc = C.reshape(b, nc, Q, st)
+
+    dA = dtc * A[None, None, None, :]                 # (b, nc, Q, nh) <= 0
+    cum = jnp.cumsum(dA, axis=2)                      # within-chunk cumsum
+    seg_end = cum[:, :, -1, :]                        # total decay per chunk
+
+    # intra-chunk (quadratic within Q):
+    # y_intra[t] = C_t . sum_{u<=t} exp(cum_t - cum_u) dt_u B_u x_u
+    if use_pallas:
+        from repro.kernels.ssd_scan import ops as ssd_ops
+
+        y_intra = ssd_ops.ssd_intra_chunk(xc, dtc, cum, Bc, Cc)
+    else:
+        decay = jnp.exp(
+            cum[:, :, :, None, :] - cum[:, :, None, :, :]
+        )                                              # (b, nc, Q, Q, nh)
+        mask = jnp.tril(jnp.ones((Q, Q), bool))
+        decay = jnp.where(mask[None, None, :, :, None], decay, 0.0)
+        scores = jnp.einsum("bcqs,bcus->bcqu", Cc.astype(jnp.float32),
+                            Bc.astype(jnp.float32))    # (b, nc, Q, Q)
+        w = scores[..., None] * decay                  # (b, nc, Q, Q, nh)
+        xdt = xc.astype(jnp.float32) * dtc[..., None]  # (b, nc, Q, nh, hd)
+        y_intra = jnp.einsum("bcqun,bcunh->bcqnh", w, xdt)
+
+    # chunk-final states: h_c = sum_u exp(seg_end - cum_u) dt_u B_u x_u^T
+    state_decay = jnp.exp(seg_end[:, :, None, :] - cum)      # (b, nc, Q, nh)
+    contrib = jnp.einsum(
+        "bcqs,bcqn,bcqnh->bcnhs",
+        Bc.astype(jnp.float32), state_decay * dtc, xc.astype(jnp.float32),
+    )                                                   # (b, nc, nh, hd, st)
+
+    # inter-chunk recurrence over nc
+    def step(h, xs):
+        contrib_c, seg_c = xs                           # (b,nh,hd,st), (b,nh)
+        h_in = h                                        # state BEFORE chunk
+        h = h * jnp.exp(seg_c)[:, :, None, None] + contrib_c
+        return h, h_in
+
+    h0 = jnp.zeros((b, nh, hd, st), jnp.float32)
+    h_final, h_prev = jax.lax.scan(
+        step,
+        h0,
+        (contrib.transpose(1, 0, 2, 3, 4), seg_end.transpose(1, 0, 2)),
+    )                                                   # (nc, b, nh, hd, st)
+    h_prev = h_prev.transpose(1, 0, 2, 3, 4)            # state entering chunk
+
+    # inter-chunk output: y_inter[t] = C_t . exp(cum_t) h_prev
+    y_inter = jnp.einsum(
+        "bcqs,bcqn,bcnhs->bcqnh",
+        Cc.astype(jnp.float32), jnp.exp(cum), h_prev,
+    )
+
+    y = (y_intra + y_inter).reshape(b, L, nh, hd)[:, :s]
+    y = y + x[:, :s].astype(jnp.float32) * D[None, None, :, None]
+    if return_state:
+        # padded tail rows have dt == 0, so they do not perturb h_final
+        return y, h_final
+    return y
+
+
+def ssm_apply(p, x, cfg, *, return_cache: bool = False):
+    """Full-sequence Mamba2 block. x: (b, s, d) -> (b, s, d).
+
+    With ``return_cache`` also returns (state (b,nh,hd,st) f32,
+    conv_buf (b,3,conv_dim)) ready for ``ssm_decode_step`` — the
+    prefill path."""
+    b, s, _ = x.shape
+    di, st, nh = cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_heads
+    hd = cfg.ssm_head_dim
+    proj = x @ p["in_proj"]
+    z, xBC_pre, dt = _split_proj(cfg, proj)
+    xBC = jax.nn.silu(_causal_conv(xBC_pre, p["conv_w"], p["conv_b"]))
+    xs = xBC[..., :di].reshape(b, s, nh, hd)
+    B = xBC[..., di : di + st]
+    C = xBC[..., di + st :]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    out = ssd_chunked(
+        xs, dt, A, B, C, p["D"], chunk=cfg.ssm_chunk,
+        use_pallas=cfg.use_pallas, return_state=return_cache,
+    )
+    y, state = out if return_cache else (out, None)
+    y = y.reshape(b, s, di).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    y = rmsnorm_apply(p["norm"], y, use_pallas=cfg.use_pallas)
+    y = y @ p["out_proj"]
+    if return_cache:
+        # conv buffer = last 3 PRE-conv inputs (left-padded if s < 3)
+        tail = xBC_pre[:, -3:, :]
+        pad = 3 - tail.shape[1]
+        if pad > 0:
+            tail = jnp.pad(tail, ((0, 0), (pad, 0), (0, 0)))
+        return y, state, tail
+    return y
+
+
+def ssm_decode_step(p, x, state, conv_buf, cfg):
+    """O(1) single-token recurrence.
+
+    x: (b, 1, d); state: (b, nh, hd, st) f32; conv_buf: (b, 3, conv_dim)
+    holding the last 3 pre-conv inputs.  Returns (y, state, conv_buf).
+    """
+    b = x.shape[0]
+    di, st, nh = cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_heads
+    hd = cfg.ssm_head_dim
+    proj = (x @ p["in_proj"])[:, 0]                       # (b, proj_dim)
+    z, xBC, dt = _split_proj(cfg, proj)
+    # causal conv over [buf, xBC]
+    window = jnp.concatenate([conv_buf, xBC[:, None, :]], axis=1)  # (b,4,c)
+    conv_out = jnp.einsum("bkc,kc->bc", window, p["conv_w"]) + p["conv_b"]
+    conv_buf = window[:, 1:]
+    xBC = jax.nn.silu(conv_out)
+    xs = xBC[..., :di].reshape(b, nh, hd)
+    B = xBC[..., di : di + st]
+    C = xBC[..., di + st :]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])   # (b, nh)
+    A = -jnp.exp(p["A_log"])
+    decay = jnp.exp(dt * A[None, :])                              # (b, nh)
+    state = state * decay[:, :, None, None] + jnp.einsum(
+        "bnh,bs,bn->bnhs", xs.astype(jnp.float32), B.astype(jnp.float32), dt
+    )
+    y = jnp.einsum("bs,bnhs->bnh", C.astype(jnp.float32), state)
+    y = y + xs.astype(jnp.float32) * p["D"][None, :, None]
+    y = y.reshape(b, di).astype(x.dtype) * jax.nn.silu(z)
+    y = rmsnorm_apply(p["norm"], y[:, None, :], use_pallas=cfg.use_pallas)
+    return y @ p["out_proj"], state, conv_buf

@@ -1,0 +1,3 @@
+from .adamw import adamw_init, adamw_update, cosine_schedule
+
+__all__ = ["adamw_init", "adamw_update", "cosine_schedule"]

@@ -1,0 +1,11 @@
+from .coded import make_coded_train_step, make_serve_step, make_train_step
+from .driver import CodedTrainingDriver, MLPModel, run_adaptive
+
+__all__ = [
+    "make_train_step",
+    "make_coded_train_step",
+    "make_serve_step",
+    "CodedTrainingDriver",
+    "MLPModel",
+    "run_adaptive",
+]

@@ -1,0 +1,128 @@
+"""Bounds (App. F), load formulas, and the runtime simulator."""
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    GilbertElliotSource,
+    estimate_alpha,
+    load_gc,
+    load_m_sgc,
+    load_sr_sgc,
+    lower_bound_arbitrary,
+    lower_bound_bursty,
+    make_scheme,
+    select_parameters,
+    simulate,
+    sr_sgc_s,
+)
+
+
+def test_paper_table1_loads():
+    """Normalized loads of Table 1 (n=256)."""
+    assert load_m_sgc(256, 1, 2, 27) == pytest.approx(0.008, abs=5e-4)
+    assert sr_sgc_s(2, 3, 23) == 12
+    assert load_sr_sgc(256, 2, 3, 23) == pytest.approx(0.051, abs=1e-3)
+    assert load_gc(256, 15) == pytest.approx(0.0625)
+
+
+def test_table3_loads():
+    assert load_m_sgc(256, 1, 2, 24) == pytest.approx(0.007512, abs=1e-5)
+    assert load_m_sgc(256, 1, 2, 27) == pytest.approx(0.007543, abs=1e-5)
+    assert load_sr_sgc(256, 2, 3, 20) == pytest.approx(0.042969, abs=1e-5)
+    assert load_gc(256, 9) == pytest.approx(0.039062, abs=1e-5)
+
+
+def test_m_sgc_load_cap():
+    """Remark 3.3: L_M-SGC <= 2/n for any lam."""
+    n = 64
+    for B in range(1, 4):
+        for W in range(B + 1, B + 5):
+            for lam in range(0, n + 1):
+                assert load_m_sgc(n, B, W, lam) <= 2.0 / n + 1e-12
+
+
+@pytest.mark.parametrize("lam", [19, 20])
+def test_m_sgc_optimal_at_high_lambda(lam):
+    """Remark F.1: at lam in {n-1, n} the load meets the converse."""
+    n, B, W = 20, 2, 5
+    assert load_m_sgc(n, B, W, lam) == pytest.approx(
+        lower_bound_bursty(n, B, W, lam)
+    )
+
+
+def test_m_sgc_gap_shrinks_with_W():
+    n, B, lam = 20, 3, 4
+    gaps = [
+        load_m_sgc(n, B, W, lam) - lower_bound_bursty(n, B, W, lam)
+        for W in (4, 8, 16, 32)
+    ]
+    assert all(g >= -1e-12 for g in gaps)
+    assert gaps == sorted(gaps, reverse=True)  # O(1/W) decay
+
+
+def test_load_ordering_matches_paper():
+    """Fig. 11: M-SGC load < SR-SGC load; both above the converse."""
+    n, B, lam = 20, 3, 4
+    for W in (4, 7, 10, 13):
+        m = load_m_sgc(n, B, W, lam)
+        assert m >= lower_bound_bursty(n, B, W, lam) - 1e-12
+    # SR-SGC needs B | W-1
+    for W in (4, 7, 10, 13):
+        assert load_m_sgc(n, B, W, lam) < load_sr_sgc(n, B, W, lam)
+
+
+def test_lower_bound_arbitrary_edges():
+    assert lower_bound_arbitrary(10, 5, 5, 3) == pytest.approx(1 / 7)
+    assert lower_bound_arbitrary(10, 2, 6, 3) == pytest.approx(
+        6 / (10 * 4 + 2 * 7)
+    )
+
+
+def test_simulator_deadlines_and_ordering():
+    """With heavy-tailed stragglers coded schemes beat uncoded, and
+    M-SGC's load advantage shows up in total runtime (paper Table 1)."""
+    n, J = 64, 60
+    src = GilbertElliotSource(
+        n=n, p_ns=0.04, p_sn=0.85, slow_factor=8.0, seed=7
+    )
+    delays = src.sample_delays(J + 8)
+    alpha = estimate_alpha(src)
+    times = {}
+    for name, kw in [
+        ("gc", dict(s=10)),
+        ("sr-sgc", dict(B=2, W=3, lam=12)),
+        ("m-sgc", dict(B=2, W=3, lam=16)),
+        ("uncoded", {}),
+    ]:
+        sch = make_scheme(name, n, J, **kw)
+        res = simulate(sch, delays, mu=1.0, alpha=alpha)
+        times[name] = res.total_time
+        for job, r in res.job_done_round.items():
+            assert r <= job + sch.T
+    assert times["m-sgc"] < times["gc"] < times["uncoded"]
+    assert times["sr-sgc"] < times["gc"]
+
+
+def test_waitout_keeps_pattern_conforming():
+    n, J = 16, 30
+    src = GilbertElliotSource(n=n, p_ns=0.2, p_sn=0.3, seed=11)
+    delays = src.sample_delays(J + 4)
+    sch = make_scheme("m-sgc", n, J, B=1, W=2, lam=3)
+    res = simulate(sch, delays, mu=1.0, alpha=estimate_alpha(src))
+    assert sch.design_model.conforms(res.effective_pattern)
+    assert res.waitouts > 0  # stressy chain must trigger the gate
+
+
+def test_parameter_selection_runs():
+    n = 16
+    delays = GilbertElliotSource(n=n, seed=3).sample_delays(24)
+    for name in ("gc", "m-sgc"):
+        cand = select_parameters(
+            name, n, delays,
+            grid=None if name == "gc" else [
+                {"B": 1, "W": 2, "lam": lam} for lam in (2, 4, 8)
+            ],
+        )
+        assert cand.est_time < float("inf")
+        assert 0 < cand.load <= 1

@@ -1,0 +1,73 @@
+"""Unit tests for (n,s)-GC coefficient construction and decoding."""
+
+import itertools
+
+import numpy as np
+import pytest
+
+from repro.core import GradientCode, RepGradientCode, cyclic_support, make_gradient_code
+from repro.core.gc import DecodingError
+
+
+def test_cyclic_support():
+    np.testing.assert_array_equal(cyclic_support(4, 3, 6), [4, 5, 0, 1])
+
+
+@pytest.mark.parametrize("n,s", [(4, 1), (6, 2), (8, 3), (10, 4), (12, 5), (7, 3)])
+def test_gc_decodes_every_subset(n, s):
+    code = GradientCode(n, s, seed=1)
+    g = np.random.default_rng(n * 100 + s).standard_normal((n, 3))
+    ell = code.encode_matrix @ g
+    for surv in itertools.combinations(range(n), n - s):
+        beta = code.decode_vector(surv)
+        np.testing.assert_allclose(beta @ ell, g.sum(0), atol=1e-6)
+
+
+def test_gc_support_is_cyclic():
+    code = GradientCode(9, 2, seed=0)
+    for i in range(9):
+        sup = np.flatnonzero(code.encode_matrix[i])
+        assert set(sup) == set(cyclic_support(i, 2, 9).tolist())
+
+
+def test_gc_rejects_small_survivor_sets():
+    code = GradientCode(6, 2, seed=0)
+    with pytest.raises(DecodingError):
+        code.decode_vector([0, 1, 2])  # 3 < n - s = 4
+
+
+def test_gc_load():
+    assert GradientCode(8, 3).normalized_load == 0.5
+
+
+@pytest.mark.parametrize("n,s", [(6, 2), (8, 3), (256, 15)])
+def test_rep_code(n, s):
+    code = RepGradientCode(n, s)
+    g = np.random.default_rng(0).standard_normal((n, 2))
+    ell = code.encode_matrix @ g
+    # one survivor per group suffices
+    surv = [k * (s + 1) for k in range(n // (s + 1))]
+    beta = code.decode_vector(surv)
+    np.testing.assert_allclose(beta @ ell, g.sum(0), atol=1e-9)
+
+
+def test_rep_superset_tolerance():
+    """App. G: GC-Rep survives > s stragglers if every group keeps one."""
+    code = RepGradientCode(6, 2)
+    g = np.random.default_rng(1).standard_normal((6, 2))
+    ell = code.encode_matrix @ g
+    beta = code.decode_vector([0, 4])  # 4 stragglers: 1,2,3,5
+    np.testing.assert_allclose(beta @ ell, g.sum(0), atol=1e-9)
+    with pytest.raises(DecodingError):
+        code.decode_vector([0, 1, 2])  # group-1 wiped out
+
+
+def test_rep_requires_divisibility():
+    with pytest.raises(ValueError):
+        RepGradientCode(7, 2)
+
+
+def test_factory_prefers_rep():
+    assert isinstance(make_gradient_code(256, 15), RepGradientCode)
+    assert isinstance(make_gradient_code(256, 27), GradientCode)
+    assert isinstance(make_gradient_code(8, 0), RepGradientCode)

@@ -1,0 +1,41 @@
+"""GE-model fitting (App. C) and data-driven parameter suggestion."""
+
+import numpy as np
+
+from repro.core.straggler import (
+    GilbertElliotSource,
+    fit_gilbert_elliot,
+    suggest_parameters,
+)
+
+
+def test_ge_fit_recovers_chain():
+    src = GilbertElliotSource(n=128, p_ns=0.05, p_sn=0.7, seed=3)
+    pat = src.sample_pattern(400)
+    fit = fit_gilbert_elliot(pat)
+    assert abs(fit["p_ns"] - 0.05) < 0.01
+    assert abs(fit["p_sn"] - 0.7) < 0.05
+    assert 0.0 < fit["stationary"] < 0.15
+    assert fit["mean_burst"] > 1.0
+
+
+def test_suggest_parameters_covers_bursts():
+    src = GilbertElliotSource(n=64, p_ns=0.04, p_sn=0.6, seed=9)
+    pat = src.sample_pattern(200)
+    sugg = suggest_parameters(pat, quantile=0.95)
+    assert sugg["B"] >= 1
+    # lam grows with the window size
+    lams = list(sugg["lam_by_W"].values())
+    assert lams == sorted(lams)
+    # the suggested (B, W, lam) must admit >= 95% of observed rounds
+    # without wait-outs for the bursty part (sanity: lam above the
+    # per-round straggler count)
+    per_round = pat.sum(axis=1)
+    W = min(sugg["lam_by_W"])
+    assert sugg["lam_by_W"][W] >= np.quantile(per_round, 0.5)
+
+
+def test_fit_handles_all_clear():
+    pat = np.zeros((50, 8), dtype=bool)
+    fit = fit_gilbert_elliot(pat)
+    assert fit["p_ns"] == 0.0

@@ -1,0 +1,73 @@
+"""Unit tests for the trip-count-weighted HLO collective census."""
+
+from repro.launch.hlo_census import (
+    _entry_name,
+    _shape_bytes,
+    _split_computations,
+    collective_census,
+)
+
+FAKE_HLO = """\
+HloModule jit_step, entry_computation_layout={...}
+
+%body.1 (arg_tuple.5: (s32[], bf16[8,128])) -> (s32[], bf16[8,128]) {
+  %p = (s32[], bf16[8,128]) parameter(0)
+  %ar.1 = bf16[8,128]{1,0} all-reduce(%x), replica_groups={...}
+  ROOT %t = (s32[], bf16[8,128]) tuple(%i, %ar.1)
+}
+
+%cond.1 (arg_tuple.6: (s32[], bf16[8,128])) -> pred[] {
+  ROOT %lt = pred[] compare(%i, %c), direction=LT
+}
+
+%inner_body.2 (arg: (s32[], f32[4,4])) -> (s32[], f32[4,4]) {
+  %ag.2 = f32[4,4]{1,0} all-gather(%y), dimensions={0}
+  ROOT %t2 = (s32[], f32[4,4]) tuple(%j, %ag.2)
+}
+
+%inner_cond.2 (arg2: (s32[], f32[4,4])) -> pred[] {
+  ROOT %lt2 = pred[] compare(%j, %c2), direction=LT
+}
+
+%outer_body.3 (argo: (s32[], f32[4,4])) -> (s32[], f32[4,4]) {
+  %w.2 = (s32[], f32[4,4]) while(%tuple.9), condition=%inner_cond.2, body=%inner_body.2, backend_config={"known_trip_count":{"n":"6"}}
+  ROOT %t3 = (s32[], f32[4,4]) tuple(%k, %gte)
+}
+
+%outer_cond.3 (argc: (s32[], f32[4,4])) -> pred[] {
+  ROOT %lt3 = pred[] compare(%k, %c3), direction=LT
+}
+
+ENTRY %main.42_spmd (p0: bf16[8,128], p1: f32[4,4]) -> bf16[8,128] {
+  %rs.0 = bf16[16,64]{1,0} reduce-scatter(%p0), dimensions={0}
+  %w.1 = (s32[], bf16[8,128]) while(%tuple.1), condition=%cond.1, body=%body.1, backend_config={"known_trip_count":{"n":"16"}}
+  %w.3 = (s32[], f32[4,4]) while(%tuple.2), condition=%outer_cond.3, body=%outer_body.3, backend_config={"known_trip_count":{"n":"9"}}
+  ROOT %out = bf16[8,128] get-tuple-element(%w.1), index=1
+}
+"""
+
+
+def test_split_and_entry():
+    comps = _split_computations(FAKE_HLO)
+    assert set(comps) >= {
+        "body.1", "cond.1", "inner_body.2", "outer_body.3", "main.42_spmd",
+    }
+    assert _entry_name(FAKE_HLO) == "main.42_spmd"
+
+
+def test_shape_bytes():
+    assert _shape_bytes("bf16[8,128]{1,0}") == 8 * 128 * 2
+    assert _shape_bytes("(s32[2], f32[4,4])") == 8 + 64
+
+
+def test_census_trip_weighting():
+    c = collective_census(FAKE_HLO)
+    # reduce-scatter at entry: 16*64*2 = 2048 bytes, x1
+    assert c["reduce-scatter"]["bytes"] == 2048
+    # all-reduce inside 16-trip loop: 8*128*2 = 2048 * 16
+    assert c["all-reduce"]["bytes"] == 2048 * 16
+    # all-gather nested 9 x 6 = 54 trips: 4*4*4 = 64 * 54
+    assert c["all-gather"]["bytes"] == 64 * 54
+    assert c["total_bytes"] == 2048 + 2048 * 16 + 64 * 54
+    # body-once raw counts each collective exactly once
+    assert c["raw_body_once_bytes"] == 2048 + 2048 + 64

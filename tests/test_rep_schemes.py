@@ -1,0 +1,88 @@
+"""App-G Rep-aware scheduling: GC-Rep superset tolerance + Algorithm 3."""
+
+import numpy as np
+import pytest
+from hypothesis import HealthCheck, given, settings
+from hypothesis import strategies as st
+
+from repro.core import GilbertElliotSource, estimate_alpha, make_scheme, simulate
+from repro.core.executor import conforming_pattern, run_protocol
+from repro.core.gc import RepGradientCode
+from repro.core.straggler import RepCoverageModel
+
+
+def test_gc_rep_tolerates_superset():
+    """s=2, n=6: workers 1,2,3,5 straggle (4 > s) but both groups keep a
+    survivor -> decodable without wait-out (App. G example)."""
+    n, s, J = 6, 2, 6
+    sch = make_scheme("gc", n, J, s=s)  # (s+1) | n -> GC-Rep
+    assert isinstance(sch.code, RepGradientCode)
+    pat = np.zeros((J, n), dtype=bool)
+    pat[2, [1, 2, 3, 5]] = True  # groups {0,1,2} and {3,4,5}: 0 and 4 survive
+    assert sch.design_model.conforms(pat)
+    run_protocol(sch, pat)
+
+
+def test_gc_rep_gate_rejects_wiped_group():
+    pat = np.zeros((3, 6), dtype=bool)
+    pat[1, [0, 1, 2]] = True  # group-0 wiped
+    assert not RepCoverageModel(6, 2).conforms(pat)
+
+
+@given(
+    groups=st.integers(2, 4),
+    s=st.integers(1, 3),
+    seed=st.integers(0, 5000),
+    density=st.floats(0.1, 0.5),
+)
+@settings(deadline=None, max_examples=25,
+          suppress_health_check=[HealthCheck.too_slow])
+def test_gc_rep_protocol_under_coverage_patterns(groups, s, seed, density):
+    n = groups * (s + 1)
+    J = 10
+    sch = make_scheme("gc", n, J, s=s)
+    pat = conforming_pattern(
+        RepCoverageModel(n, s), J, n, seed=seed, density=density
+    )
+    run_protocol(sch, pat, seed=seed)
+
+
+def test_sr_sgc_rep_algorithm3_skips_covered_groups():
+    """After a straggling round, only UNCOVERED groups re-attempt."""
+    n, J = 6, 8
+    sch = make_scheme("sr-sgc", n, J, B=1, W=2, lam=3)  # s=2 -> Rep
+    assert isinstance(sch.code, RepGradientCode)
+    sch.assign(1)
+    # round 1: workers 0 and 1 straggle (group-0 still covered by 2)
+    strag = np.zeros(n, dtype=bool)
+    strag[[0, 1]] = True
+    sch.observe(1, strag)
+    sch.collect(1)  # group coverage -> decodable already
+    tasks = sch.assign(2)
+    # no worker should re-attempt job 1: its group result was returned
+    assert all(mt.job == 2 for mt in tasks if not mt.trivial)
+
+
+def test_sr_sgc_rep_still_meets_deadlines():
+    n, J = 12, 30
+    sch = make_scheme("sr-sgc", n, J, B=1, W=2, lam=3)  # s=2, 3|12 -> Rep
+    src = GilbertElliotSource(n=n, p_ns=0.08, p_sn=0.7, seed=5)
+    delays = src.sample_delays(J + 3)
+    res = simulate(sch, delays, mu=1.0, alpha=estimate_alpha(src))
+    for job, r in res.job_done_round.items():
+        assert r <= job + sch.T
+
+
+def test_rep_reduces_waitouts_vs_general():
+    """Same (n, s): the Rep gate admits strictly more patterns, so the
+    simulated run needs no more wait-outs than the general code."""
+    n, J, s = 12, 60, 2
+    src = GilbertElliotSource(n=n, p_ns=0.12, p_sn=0.6, seed=2)
+    delays = src.sample_delays(J + 2)
+    alpha = estimate_alpha(src)
+    rep = make_scheme("gc", n, J, s=s, prefer_rep=True)
+    gen = make_scheme("gc", n, J, s=s, prefer_rep=False)
+    r_rep = simulate(rep, delays, mu=1.0, alpha=alpha)
+    r_gen = simulate(gen, delays, mu=1.0, alpha=alpha)
+    assert r_rep.waitouts <= r_gen.waitouts
+    assert r_rep.total_time <= r_gen.total_time + 1e-9

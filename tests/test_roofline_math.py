@@ -1,0 +1,67 @@
+"""Roofline-term arithmetic on synthetic dry-run records."""
+
+import sys
+
+sys.path.insert(0, ".")  # benchmarks package lives at repo root
+
+from benchmarks.roofline import HBM_BW, ICI_BW, PEAK_FLOPS, analyze_record  # noqa: E402
+
+
+def _record(**over):
+    rec = {
+        "arch": "llama3.2-1b",
+        "shape": "train_4k",
+        "mesh": "16x16",
+        "coded": False,
+        "status": "ok",
+        "num_devices": 256,
+        "flops_per_device": 1.97e14,          # -> compute 1.0 s
+        "flops_per_device_scanned": 1.97e13,  # trip ratio 10
+        "bytes_per_device_scanned": 8.19e10,  # x10 -> 8.19e11 -> 1.0 s
+        "collectives": {"total_bytes": 5.0e10},  # -> 1.0 s
+        "param_count": 1_240_000_000,
+        "active_param_count": 1_240_000_000,
+    }
+    rec.update(over)
+    return rec
+
+
+def test_three_terms():
+    row = analyze_record(_record())
+    assert abs(row.compute_s - 1.0) < 1e-6
+    assert abs(row.memory_s - 1.0) < 1e-6
+    assert abs(row.collective_s - 1.0) < 1e-6
+    assert row.step_s == max(row.compute_s, row.memory_s, row.collective_s)
+
+
+def test_dominance():
+    row = analyze_record(_record(collectives={"total_bytes": 5.0e12}))
+    assert row.dominant == "collective"
+    row = analyze_record(_record(flops_per_device=1.97e16))
+    assert row.dominant == "compute"
+
+
+def test_model_flops_train_and_decode():
+    row = analyze_record(_record())
+    # 6 * N * tokens = 6 * 1.24e9 * 4096 * 256
+    assert abs(row.model_flops - 6 * 1.24e9 * 4096 * 256) < 1e9
+    dec = analyze_record(_record(shape="decode_32k"))
+    assert abs(dec.model_flops - 2 * 1.24e9 * 128) < 1e6
+
+
+def test_coded_replication_factor():
+    gc = analyze_record(_record(coded="gc"))
+    msgc = analyze_record(_record(coded="msgc"))
+    base = analyze_record(_record())
+    assert abs(gc.model_flops / base.model_flops - 16.0) < 1e-6
+    assert abs(msgc.model_flops / base.model_flops - 2.0) < 1e-6
+
+
+def test_skip_records_return_none():
+    assert analyze_record({"status": "skip"}) is None
+
+
+def test_hardware_constants():
+    assert PEAK_FLOPS == 197e12
+    assert HBM_BW == 819e9
+    assert ICI_BW == 50e9

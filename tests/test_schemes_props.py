@@ -1,0 +1,113 @@
+"""Property tests: Props 3.1 / 3.2 — under conforming straggler patterns
+every job decodes exactly, on time.  ``run_protocol`` asserts both the
+deadline and numeric equality with the uncoded full gradient."""
+
+import numpy as np
+import pytest
+from hypothesis import HealthCheck, given, settings
+from hypothesis import strategies as st
+
+from repro.core import make_scheme
+from repro.core.executor import conforming_pattern, run_protocol
+from repro.core.straggler import ArbitraryModel, BurstyModel, PerRoundModel
+
+COMMON = dict(
+    deadline=None,
+    max_examples=25,
+    suppress_health_check=[HealthCheck.too_slow],
+)
+
+
+@given(
+    n=st.integers(4, 16),
+    s=st.integers(0, 5),
+    seed=st.integers(0, 10_000),
+    density=st.floats(0.05, 0.5),
+)
+@settings(**COMMON)
+def test_gc_prop(n, s, seed, density):
+    s = min(s, n - 1)
+    J = 12
+    sch = make_scheme("gc", n, J, s=s, seed=seed)
+    pat = conforming_pattern(PerRoundModel(s), J, n, seed=seed, density=density)
+    run_protocol(sch, pat, seed=seed)
+
+
+@given(
+    n=st.integers(4, 14),
+    B=st.integers(1, 3),
+    x=st.integers(1, 3),
+    lam=st.integers(1, 8),
+    seed=st.integers(0, 10_000),
+    bursty=st.booleans(),
+    density=st.floats(0.05, 0.45),
+)
+@settings(**COMMON)
+def test_sr_sgc_prop31(n, B, x, lam, seed, bursty, density):
+    lam = min(lam, n)
+    W = x * B + 1
+    J = 10
+    sch = make_scheme("sr-sgc", n, J, B=B, W=W, lam=lam, seed=seed)
+    model = BurstyModel(B, W, lam) if bursty else PerRoundModel(sch.s)
+    pat = conforming_pattern(model, J + sch.T, n, seed=seed, density=density)
+    run_protocol(sch, pat, seed=seed)
+
+
+@given(
+    n=st.integers(4, 12),
+    B=st.integers(1, 3),
+    dW=st.integers(1, 3),
+    lam=st.integers(0, 12),
+    seed=st.integers(0, 10_000),
+    bursty=st.booleans(),
+    density=st.floats(0.05, 0.45),
+)
+@settings(**COMMON)
+def test_m_sgc_prop32(n, B, dW, lam, seed, bursty, density):
+    lam = min(lam, n)
+    W = B + dW
+    J = 10
+    sch = make_scheme("m-sgc", n, J, B=B, W=W, lam=lam, seed=seed)
+    model = (
+        BurstyModel(B, W, lam)
+        if bursty
+        else ArbitraryModel(B, W + B - 1, lam)
+    )
+    pat = conforming_pattern(model, J + sch.T, n, seed=seed, density=density)
+    run_protocol(sch, pat, seed=seed)
+
+
+def test_sr_sgc_tolerates_strict_superset_of_gc():
+    """Remark 3.1: SR-SGC at load (s+1)/n handles bursty patterns with
+    lam > s distinct stragglers that plain (n,s)-GC cannot."""
+    n, B, W, lam = 8, 1, 2, 4
+    J = 8
+    sch = make_scheme("sr-sgc", n, J, B=B, W=W, lam=lam)
+    assert sch.s == 2 < lam
+    # burst of lam=4 stragglers in one round (conforms to bursty model)
+    pat = np.zeros((J + sch.T, n), dtype=bool)
+    pat[3, :4] = True
+    assert BurstyModel(B, W, lam).conforms(pat)
+    run_protocol(sch, pat)  # would raise for (8,2)-GC
+
+    gc = make_scheme("gc", n, J, s=2)
+    with pytest.raises(AssertionError):
+        run_protocol(gc, pat)
+
+
+def test_m_sgc_all_workers_straggle_alternate_rounds():
+    """Example F.1: lam=n, all workers straggle every other round."""
+    n, J = 4, 8
+    sch = make_scheme("m-sgc", n, J, B=1, W=2, lam=4)
+    assert sch.normalized_load == pytest.approx(0.5)
+    pat = np.zeros((J + sch.T, n), dtype=bool)
+    pat[::2] = True  # rounds 1,3,5,... all straggle
+    run_protocol(sch, pat)
+
+
+def test_msgc_deadline_is_T():
+    n, J = 6, 6
+    sch = make_scheme("m-sgc", n, J, B=2, W=3, lam=2)
+    assert sch.T == 3  # W - 2 + B
+    sch2 = make_scheme("sr-sgc", n, J, B=2, W=3, lam=2)
+    assert sch2.T == 2

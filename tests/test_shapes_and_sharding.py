@@ -1,0 +1,123 @@
+"""Input-shape specs, skip rules, and sharding-rule unit tests."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ARCHS, SHAPES, get_config, get_smoke, input_specs, skip_reason
+from repro.launch.mesh import make_cpu_mesh
+from repro.launch.sharding import param_pspec
+
+
+def test_shapes_table():
+    assert SHAPES["train_4k"].seq_len == 4096
+    assert SHAPES["train_4k"].global_batch == 256
+    assert SHAPES["prefill_32k"].global_batch == 32
+    assert SHAPES["decode_32k"].global_batch == 128
+    assert SHAPES["long_500k"].seq_len == 524288
+    assert SHAPES["long_500k"].global_batch == 1
+
+
+def test_skip_matrix():
+    """Exactly the documented skips (DESIGN.md §Arch-applicability)."""
+    skipped = {
+        (a, s)
+        for a in ARCHS
+        for s in SHAPES
+        if skip_reason(get_config(a), SHAPES[s])
+    }
+    expected = {
+        ("hubert-xlarge", "decode_32k"),
+        ("hubert-xlarge", "long_500k"),
+        ("llama3.2-1b", "long_500k"),
+        ("qwen2-0.5b", "long_500k"),
+        ("qwen2-72b", "long_500k"),
+        ("deepseek-67b", "long_500k"),
+        ("paligemma-3b", "long_500k"),
+        ("qwen2-moe-a2.7b", "long_500k"),
+    }
+    assert skipped == expected
+    # 40 pairs total; 32 runnable
+    assert len(ARCHS) * len(SHAPES) - len(skipped) == 32
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_input_specs_no_allocation(arch):
+    cfg = get_config(arch)
+    for name, shape in SHAPES.items():
+        if skip_reason(cfg, shape):
+            continue
+        specs = input_specs(cfg, shape)
+        for leaf in jax.tree.leaves(
+            specs, is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct)
+        ):
+            assert isinstance(leaf, jax.ShapeDtypeStruct), (arch, name, leaf)
+        if shape.mode in ("train", "prefill"):
+            b = jax.tree.leaves(specs["batch"])[0].shape[0]
+            assert b == shape.global_batch
+        else:
+            assert specs["token"].shape == (shape.global_batch, 1)
+
+
+def test_vlm_specs_include_prefix():
+    cfg = get_config("paligemma-3b")
+    specs = input_specs(cfg, "train_4k")
+    assert specs["batch"]["prefix_embeds"].shape == (256, 256, 2048)
+    # text + prefix = assigned seq_len
+    assert specs["batch"]["tokens"].shape[1] + 256 == 4096
+
+
+def test_audio_specs_are_frames():
+    cfg = get_config("hubert-xlarge")
+    specs = input_specs(cfg, "train_4k")
+    assert specs["batch"]["frames"].shape == (256, 4096, 1280)
+
+
+def test_param_pspec_rules():
+    mesh = make_cpu_mesh(1, 1)  # single device; rules fall back cleanly
+
+    class Leaf:
+        def __init__(self, shape):
+            self.shape = shape
+
+    # megatron pattern: wq column, wo row — on a 1-wide model axis all
+    # dims divide, so the preferred axes survive
+    spec = param_pspec(("layers", "attn", "wq"), Leaf((2, 64, 128)), None, mesh)
+    assert spec == P(None, None, "model")
+    spec = param_pspec(("layers", "attn", "wo"), Leaf((2, 128, 64)), None, mesh)
+    assert spec == P(None, "model", None)
+    spec = param_pspec(("embed",), Leaf((1000, 64)), None, mesh)
+    assert spec == P("model", None)
+    spec = param_pspec(("layers", "norm1", "gamma"), Leaf((2, 64)), None, mesh)
+    assert spec == P(None, None)
+
+
+def test_param_pspec_divisibility_fallback():
+    mesh = make_cpu_mesh(1, 1)
+
+    class Leaf:
+        def __init__(self, shape):
+            self.shape = shape
+
+    # a dim that does not divide the axis size gets replicated — with a
+    # 1-sized axis everything divides, so emulate via a fake mesh shape
+    import repro.launch.sharding as sh
+
+    orig = sh._axis_size
+    try:
+        sh._axis_size = lambda mesh, axes: 16 if axes else 1
+        spec = param_pspec(("layers", "attn", "wq"), Leaf((2, 64, 100)), None, mesh)
+        assert spec == P(None, None, None)  # 100 % 16 != 0 -> replicate
+    finally:
+        sh._axis_size = orig
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_config_family_consistency(arch):
+    full, smoke = get_config(arch), get_smoke(arch)
+    assert full.family == smoke.family
+    assert full.causal == smoke.causal
+    assert full.frontend == smoke.frontend
+    assert (full.num_experts > 0) == (smoke.num_experts > 0)
+    assert (full.ssm_state > 0) == (smoke.ssm_state > 0)
