@@ -1,0 +1,56 @@
+"""Grid sweep on the vectorized batch engine.
+
+Sweeps (scheme parameters x seeds x GE traces) through
+``simulate_batch`` in one call, then reports the fastest
+parameterization per scheme — the Monte-Carlo version of the paper's
+App.-J probe procedure (what Table 1 / Figs. 15-18 aggregate).
+
+    PYTHONPATH=src python examples/parameter_sweep.py [n] [rounds]
+"""
+
+import sys
+import time
+
+import numpy as np
+
+from repro.core import GilbertElliotSource, estimate_alpha, simulate_batch
+
+n = int(sys.argv[1]) if len(sys.argv) > 1 else 64
+rounds = int(sys.argv[2]) if len(sys.argv) > 2 else 60
+
+# several independent GE traces of the Fig.-1-calibrated cluster
+# (traces are the Monte-Carlo axis: load-only sim results are
+# seed-invariant, see simulate_batch's docstring)
+sources = [
+    GilbertElliotSource(n=n, seed=100 + k, p_ns=0.035, p_sn=0.85,
+                        slow_factor=6.0, jitter=0.05)
+    for k in range(5)
+]
+traces = np.stack([src.sample_delays(rounds) for src in sources])
+alpha = estimate_alpha(sources[0])
+
+grids = {
+    "gc": [("gc", {"s": s}) for s in (4, 8, 12, 15, 20)],
+    "sr-sgc": [("sr-sgc", {"B": B, "W": B + 1, "lam": lam})
+               for B in (1, 2) for lam in (4, 8, 16, 23)],
+    "m-sgc": [("m-sgc", {"B": B, "W": B + 1, "lam": lam})
+              for B in (1, 2) for lam in (4, 8, 16, 27)],
+}
+
+t0 = time.perf_counter()
+for scheme, specs in grids.items():
+    results = simulate_batch(specs, traces, alpha=alpha, strict=False)
+    best_params, best_t = None, float("inf")
+    for i, (_, params) in enumerate(specs):
+        runs = [r for r in results[i].ravel() if r is not None]
+        if not runs:
+            continue
+        per_job = float(np.mean([r.total_time / len(r.job_done_round)
+                                 for r in runs]))
+        if per_job < best_t:
+            best_params, best_t = params, per_job
+    print(f"{scheme:8s} best={best_params} per_job={best_t:.3f}s "
+          f"({len(specs) * traces.shape[0]} sims)")
+elapsed = time.perf_counter() - t0
+total = sum(len(g) for g in grids.values()) * traces.shape[0]
+print(f"swept {total} simulations (n={n}, {rounds} rounds) in {elapsed:.2f}s")

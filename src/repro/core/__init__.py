@@ -1,5 +1,35 @@
-"""Core library: sequential gradient coding (the paper's contribution)."""
+"""Core library: sequential gradient coding (the paper's contribution).
 
+Two simulation paths cover every workload:
+
+* **Legacy scalar path** — ``simulate`` + ``Scheme.assign/observe/
+  collect``: materializes ``MiniTask`` descriptors and decode weights;
+  what the coded trainer consumes, and the differential-testing oracle.
+* **Vectorized batch engine** (``core.batch``) — ``simulate_fast`` is a
+  bit-for-bit drop-in for ``simulate`` on the schemes' load-only fast
+  path (``Scheme.step``/``collect_jobs``), and ``simulate_batch`` runs
+  a whole (specs x seeds x traces) grid with the per-round timing math
+  done in one broadcast NumPy pass.  ``select_parameters`` (App. J)
+  runs on this engine; ``select_parameters_legacy`` keeps the old
+  per-candidate loop as the oracle.
+
+Typical sweep::
+
+    from repro.core import simulate_batch
+    results = simulate_batch(
+        [("m-sgc", {"B": 2, "W": 3, "lam": 27}), ("gc", {"s": 15})],
+        traces,                   # (num_traces, rounds, n) delays
+        seeds=(0, 1), alpha=8.0,
+    )                             # object array (specs, seeds, traces)
+    total = results[0, 0, 0].total_time
+"""
+
+from .batch import (
+    precompute_rounds,
+    select_parameters_fast,
+    simulate_batch,
+    simulate_fast,
+)
 from .bounds import (
     load_gc,
     load_m_sgc,
@@ -23,6 +53,7 @@ from .simulator import (
     estimate_alpha,
     reference_profile,
     select_parameters,
+    select_parameters_legacy,
     simulate,
 )
 from .straggler import (
@@ -71,6 +102,11 @@ __all__ = [
     "simulate",
     "SimResult",
     "select_parameters",
+    "select_parameters_legacy",
     "estimate_alpha",
     "reference_profile",
+    "simulate_fast",
+    "simulate_batch",
+    "select_parameters_fast",
+    "precompute_rounds",
 ]

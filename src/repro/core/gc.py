@@ -59,13 +59,21 @@ class GradientCode:
     n: int
     s: int
     seed: int = 0
-    encode_matrix: np.ndarray = field(init=False, repr=False)
     _decode_cache: dict = field(init=False, repr=False, default_factory=dict)
 
     def __post_init__(self) -> None:
         if not 0 <= self.s < self.n:
             raise ValueError(f"need 0 <= s < n, got s={self.s}, n={self.n}")
-        self.encode_matrix = self._build_verified()
+        self._matrix: np.ndarray | None = None
+
+    @property
+    def encode_matrix(self) -> np.ndarray:
+        """Built (and verified) lazily: the load-only simulation fast
+        path never touches coefficients, so pure-capacity checks skip
+        the O(n) solve + verification entirely."""
+        if self._matrix is None:
+            self._matrix = self._build_verified()
+        return self._matrix
 
     # -- construction ---------------------------------------------------
     def _build(self, seed: int) -> np.ndarray:
@@ -151,6 +159,10 @@ class GradientCode:
     def can_decode(self, survivors) -> bool:
         return len(set(survivors)) >= self.n - self.s
 
+    def can_decode_mask(self, survivors: np.ndarray) -> bool:
+        """Decodability from a bool[n] survivor mask (load-only fast path)."""
+        return int(survivors.sum()) >= self.n - self.s
+
     @property
     def normalized_load(self) -> float:
         return (self.s + 1) / self.n
@@ -169,17 +181,24 @@ class RepGradientCode:
 
     n: int
     s: int
-    encode_matrix: np.ndarray = field(init=False, repr=False)
 
     def __post_init__(self) -> None:
         if (self.n % (self.s + 1)) != 0:
             raise ValueError("GC-Rep requires (s+1) | n")
-        B = np.zeros((self.n, self.n), dtype=np.float64)
-        g = self.s + 1
-        for i in range(self.n):
-            k = i // g
-            B[i, k * g : (k + 1) * g] = 1.0
-        self.encode_matrix = B
+        self._matrix: np.ndarray | None = None
+
+    @property
+    def encode_matrix(self) -> np.ndarray:
+        """Built lazily: the load-only fast path only needs group
+        coverage, not the n x n replication matrix."""
+        if self._matrix is None:
+            B = np.zeros((self.n, self.n), dtype=np.float64)
+            g = self.s + 1
+            for i in range(self.n):
+                k = i // g
+                B[i, k * g : (k + 1) * g] = 1.0
+            self._matrix = B
+        return self._matrix
 
     @property
     def num_groups(self) -> int:
@@ -210,6 +229,12 @@ class RepGradientCode:
         — a strict SUPERSET of the any-(n-s) rule."""
         groups = {self.group_of(w) for w in survivors}
         return len(groups) == self.num_groups
+
+    def can_decode_mask(self, survivors: np.ndarray) -> bool:
+        """Decodability from a bool[n] survivor mask (load-only fast path)."""
+        return bool(
+            survivors.reshape(self.num_groups, self.s + 1).any(axis=1).all()
+        )
 
     @property
     def normalized_load(self) -> float:

@@ -10,12 +10,24 @@ Every scheme is a *round scheduler* with the master-side state machine:
 
 ``assign`` returns per-worker task descriptors rich enough for the real
 coded trainer (chunk ids + encode coefficients), while the runtime
-simulator only consumes the per-round load.  The wait-out rule of
-Remark 2.3 lives *outside* the scheme (see ``simulator.py`` /
-``train/driver.py``): the caller must only feed ``observe`` straggler
-sets admitted by ``scheme.design_model`` — under that contract every
-job-t is decodable by the end of round-(t+T) (Props 3.1 / 3.2), which
-``collect`` asserts.
+simulator only consumes the per-round load.  For simulation there is a
+**load-only fast path** that never materializes ``MiniTask`` objects:
+
+    scheme.step(t, straggler_mask)           # assign + observe, fused
+    done = scheme.collect_jobs(t)            # [(job, round_done)], no decode
+
+``step``/``collect_jobs`` advance exactly the same master state as
+``assign``/``observe``/``collect`` (differentially tested in
+``tests/test_batch_engine.py``) but use vectorized bookkeeping and skip
+the decode-weight solve — the simulator only needs decodability, not
+the beta vectors.  Use one protocol or the other for a given run; do
+not interleave them round-by-round.
+
+The wait-out rule of Remark 2.3 lives *outside* the scheme (see
+``simulator.py`` / ``train/driver.py``): the caller must only feed
+``observe``/``step`` straggler sets admitted by ``scheme.design_model``
+— under that contract every job-t is decodable by the end of round-(t+T)
+(Props 3.1 / 3.2), which ``collect``/``collect_jobs`` assert.
 
 Task descriptor vocabulary (``MiniTask.kind``):
     "ell"  — full (n,s)-GC task: all ``s+1`` cyclic chunks of job-t
@@ -100,6 +112,21 @@ class Scheme:
     def collect(self, t: int) -> list[JobDecode]:
         raise NotImplementedError
 
+    # -- load-only fast path (simulation) -------------------------------
+    def step(self, t: int, stragglers: np.ndarray) -> None:
+        """Fused assign + observe without materializing MiniTasks.
+
+        Subclasses override this with vectorized state updates; the
+        default falls back to the descriptor path.
+        """
+        self.assign(t)
+        self.observe(t, stragglers)
+
+    def collect_jobs(self, t: int) -> list[tuple[int, int]]:
+        """Sim-only collect: ``[(job, round_done)]`` skipping the
+        decode-weight solve (only decodability is checked)."""
+        return [(jd.job, jd.round_done) for jd in self.collect(t)]
+
     def round_load(self, t: int) -> float:
         """Per-worker normalized load in round-t (constant for all schemes)."""
         return self.normalized_load
@@ -126,7 +153,7 @@ class GCScheme(Scheme):
         else:
             self.design_model = PerRoundModel(s)
         self.normalized_load = (s + 1) / n
-        self._returned: dict[int, set[int]] = {}
+        self._returned: dict[int, np.ndarray] = {}  # job -> bool[n] survivors
         self._done: set[int] = set()
 
     def assign(self, t: int) -> list[MiniTask]:
@@ -136,26 +163,43 @@ class GCScheme(Scheme):
 
     def observe(self, t: int, stragglers: np.ndarray) -> None:
         if 1 <= t <= self.J:
-            self._returned[t] = set(np.flatnonzero(~stragglers).tolist())
+            self._returned[t] = ~stragglers
 
-    def collect(self, t: int) -> list[JobDecode]:
+    def step(self, t: int, stragglers: np.ndarray) -> None:
+        self.observe(t, stragglers)  # assign has no side effects
+
+    def _survivors(self, t: int) -> np.ndarray:
+        surv = self._returned.get(t)
+        return surv if surv is not None else np.zeros(self.n, dtype=bool)
+
+    def collect_jobs(self, t: int) -> list[tuple[int, int]]:
         if t in self._done or not 1 <= t <= self.J:
             return []
-        surv = self._returned.get(t, set())
-        if not self.code.can_decode(surv):
+        surv = self._survivors(t)
+        if not self.code.can_decode_mask(surv):
             raise AssertionError(
-                f"GC: job {t} undecodable from {len(surv)} survivors; "
+                f"GC: job {t} undecodable from {int(surv.sum())} survivors; "
                 "caller violated the wait-out contract"
             )
-        beta = self.code.decode_vector(sorted(surv))
         self._done.add(t)
-        return [
-            JobDecode(
-                job=t,
-                round_done=t,
-                ell_weights={w: float(beta[w]) for w in surv if beta[w] != 0.0},
+        return [(t, t)]
+
+    def collect(self, t: int) -> list[JobDecode]:
+        jobs = self.collect_jobs(t)
+        out = []
+        for job, done_round in jobs:
+            surv = np.flatnonzero(self._survivors(job))
+            beta = self.code.decode_vector(surv)
+            out.append(
+                JobDecode(
+                    job=job,
+                    round_done=done_round,
+                    ell_weights={
+                        int(w): float(beta[w]) for w in surv if beta[w] != 0.0
+                    },
+                )
             )
-        ]
+        return out
 
 
 # ---------------------------------------------------------------------------
@@ -184,11 +228,15 @@ class SRSGCScheme(Scheme):
             (BurstyModel(B, W, lam), PerRoundModel(self.s)), W
         )
         self.normalized_load = (self.s + 1) / n
-        # master state
-        self._returned: dict[int, set[int]] = {}        # job -> workers with l_i(job)
+        # master state (numpy masks so step/observe are vectorized)
+        self._returned: dict[int, np.ndarray] = {}      # job -> bool[n] with l_i(job)
         self._returned_in_round: dict[int, int] = {}    # paper's N(t)
-        self._assigned: dict[int, list[int]] = {}       # round -> job per worker
+        self._assigned: dict[int, np.ndarray] = {}      # round -> int[n] job per worker
         self._done: dict[int, int] = {}                 # job -> round finished
+        if isinstance(self.code, RepGradientCode):
+            self._groups = np.arange(n) // (self.s + 1)
+        else:
+            self._groups = None
 
     def _N(self, t: int) -> int:
         """N(t): # of job-t results returned during round-t (N=n outside [1:J])."""
@@ -196,66 +244,98 @@ class SRSGCScheme(Scheme):
             return self.n
         return self._returned_in_round.get(t, 0)
 
+    def _compute_jobs(self, t: int) -> np.ndarray:
+        """Algorithm 1 retry rule, vectorized: per-worker job for round-t."""
+        n = self.n
+        jobs = np.full(n, t, dtype=np.int64)
+        tb = t - self.B
+        if not 1 <= tb <= self.J:
+            return jobs
+        prev = self._assigned.get(tb)
+        prev_returned = self._returned.get(tb)
+        if prev is not None and prev_returned is not None:
+            attempted_and_returned = (prev == tb) & prev_returned
+        else:
+            attempted_and_returned = np.zeros(n, dtype=bool)
+        eligible = ~attempted_and_returned
+        if self._groups is not None:
+            # Algorithm 3 (App. G): skip workers whose replication group's
+            # result is already in — no point re-attempting it
+            covered = np.zeros(self.code.num_groups, dtype=bool)
+            if prev_returned is not None:
+                covered[self._groups[prev_returned]] = True
+            eligible &= ~covered[self._groups]
+        # retries go to eligible workers in worker order until the total
+        # returned-or-retrying count delta reaches n - s
+        budget = self.n - self.s - self._N(tb)
+        retry = eligible & (np.cumsum(eligible) - eligible < budget)
+        jobs[retry] = tb
+        return jobs
+
     def assign(self, t: int) -> list[MiniTask]:
-        jobs = []
-        delta = self._N(t - self.B)
-        prev = self._assigned.get(t - self.B, [None] * self.n)
-        prev_returned = self._returned.get(t - self.B, set())
-        rep = isinstance(self.code, RepGradientCode)
-        covered_groups = (
-            {self.code.group_of(w) for w in prev_returned} if rep else set()
-        )
-        for i in range(self.n):
-            attempted_and_returned = prev[i] == t - self.B and i in prev_returned
-            if rep and self.code.group_of(i) in covered_groups:
-                # Algorithm 3 (App. G): the group's replicated result is
-                # already in — no point re-attempting it
-                jobs.append(t)
-                continue
-            if delta < self.n - self.s and not attempted_and_returned and 1 <= t - self.B <= self.J:
-                jobs.append(t - self.B)
-                delta += 1
-            else:
-                jobs.append(t)
+        jobs = self._compute_jobs(t)
         self._assigned[t] = jobs
         return [
-            MiniTask("ell", j, i, retry=j < t) if 1 <= j <= self.J
-            else MiniTask("none", j, i)
+            MiniTask("ell", int(j), i, retry=bool(j < t)) if 1 <= j <= self.J
+            else MiniTask("none", int(j), i)
             for i, j in enumerate(jobs)
         ]
 
-    def observe(self, t: int, stragglers: np.ndarray) -> None:
-        jobs = self._assigned[t]
+    def _observe_jobs(
+        self, t: int, jobs: np.ndarray, stragglers: np.ndarray
+    ) -> None:
+        ok = ~stragglers
         fresh = 0
-        for i in range(self.n):
-            j = jobs[i]
-            if not stragglers[i] and 1 <= j <= self.J:
-                self._returned.setdefault(j, set()).add(i)
-                if j == t:
-                    fresh += 1
+        for job in (t, t - self.B):
+            if not 1 <= job <= self.J:
+                continue
+            mask = ok & (jobs == job)
+            if job == t:
+                fresh = int(mask.sum())
+            got = self._returned.get(job)
+            if got is None:
+                got = self._returned[job] = np.zeros(self.n, dtype=bool)
+            got |= mask
         self._returned_in_round[t] = fresh
 
-    def collect(self, t: int) -> list[JobDecode]:
+    def observe(self, t: int, stragglers: np.ndarray) -> None:
+        self._observe_jobs(t, self._assigned[t], stragglers)
+
+    def step(self, t: int, stragglers: np.ndarray) -> None:
+        jobs = self._compute_jobs(t)
+        self._assigned[t] = jobs
+        self._observe_jobs(t, jobs, stragglers)
+
+    def collect_jobs(self, t: int) -> list[tuple[int, int]]:
         out = []
         for job in (t, t - self.B):
             if not 1 <= job <= self.J or job in self._done:
                 continue
-            surv = self._returned.get(job, set())
-            if self.code.can_decode(surv):
-                beta = self.code.decode_vector(sorted(surv))
+            surv = self._returned.get(job)
+            if surv is not None and self.code.can_decode_mask(surv):
                 self._done[job] = t
-                out.append(
-                    JobDecode(
-                        job=job,
-                        round_done=t,
-                        ell_weights={w: float(beta[w]) for w in surv if beta[w] != 0.0},
-                    )
-                )
+                out.append((job, t))
             elif job == t - self.B:
                 raise AssertionError(
                     f"SR-SGC: job {job} missed deadline round {t}; "
                     "caller violated the wait-out contract"
                 )
+        return out
+
+    def collect(self, t: int) -> list[JobDecode]:
+        out = []
+        for job, done_round in self.collect_jobs(t):
+            surv = np.flatnonzero(self._returned[job])
+            beta = self.code.decode_vector(surv)
+            out.append(
+                JobDecode(
+                    job=job,
+                    round_done=done_round,
+                    ell_weights={
+                        int(w): float(beta[w]) for w in surv if beta[w] != 0.0
+                    },
+                )
+            )
         return out
 
 
@@ -281,6 +361,10 @@ class MSGCScheme(Scheme):
       * j <= W-2: first attempt of D1 local chunk j.
       * j >= W-1 (m = j-W+1): earliest pending failed D1 chunk of that
         job if any, else the group-m coded task ``l_{i,m}(job)``.
+
+    Pending failed D1 chunks are a per-job bool[n, W-1] mask: locals are
+    first-attempted in increasing order and retried lowest-first, so the
+    queue head is simply the first set bit of a worker's row.
     """
 
     name = "m-sgc"
@@ -309,9 +393,9 @@ class MSGCScheme(Scheme):
             (BurstyModel(B, W, lam), ArbitraryModel(B, W + B - 1, lam))
         )
         # master state, keyed by job
-        self._pending: dict[tuple[int, int], list[int]] = {}   # (job, worker) -> local chunks
-        self._d1_done: dict[int, np.ndarray] = {}              # job -> bool[n, W-1]
-        self._d2_returned: dict[int, list[set[int]]] = {}      # job -> [set per group]
+        self._pending: dict[int, np.ndarray] = {}    # job -> bool[n, W-1] failed D1
+        self._d1_done: dict[int, np.ndarray] = {}    # job -> bool[n, W-1]
+        self._d2_returned: dict[int, np.ndarray] = {}  # job -> bool[B, n]
         self._assigned: dict[int, list[list[MiniTask]]] = {}   # round -> [n][slots]
         self._done: dict[int, int] = {}
 
@@ -337,15 +421,15 @@ class MSGCScheme(Scheme):
     def _job_state(self, job: int):
         if job not in self._d1_done:
             self._d1_done[job] = np.zeros((self.n, self.W - 1), dtype=bool)
-            self._d2_returned[job] = [set() for _ in range(self.B)]
-        return self._d1_done[job], self._d2_returned[job]
+            self._pending[job] = np.zeros((self.n, self.W - 1), dtype=bool)
+            self._d2_returned[job] = np.zeros((self.B, self.n), dtype=bool)
+        return self._d1_done[job], self._pending[job], self._d2_returned[job]
 
     def assign(self, t: int) -> list[MiniTask]:
         table: list[list[MiniTask]] = []
         flat: list[MiniTask] = []
-        # Track per (job, worker) which pending chunk the *next* slot should
-        # take.  Within one round, distinct slots serve distinct jobs, so a
-        # simple head-of-queue peek per job suffices.
+        # Within one round, distinct slots serve distinct jobs, so the
+        # pending head per (job, worker) is stable across the round.
         for i in range(self.n):
             row = []
             for j in range(self.slots):
@@ -353,14 +437,15 @@ class MSGCScheme(Scheme):
                 if not 1 <= job <= self.J:
                     row.append(MiniTask("none", job, i))
                     continue
+                _, pend, _ = self._job_state(job)
                 if j <= self.W - 2:
                     row.append(MiniTask("d1", job, i, chunk=self.d1_chunk(i, j)))
                     continue
                 m = j - (self.W - 1)
-                pend = self._pending.get((job, i))
-                if pend:
+                if pend[i].any():
+                    head = int(pend[i].argmax())
                     row.append(
-                        MiniTask("d1", job, i, chunk=self.d1_chunk(i, pend[0]), retry=True)
+                        MiniTask("d1", job, i, chunk=self.d1_chunk(i, head), retry=True)
                     )
                 elif self.lam < self.n:
                     row.append(MiniTask("d2", job, i, chunk=m))
@@ -379,56 +464,86 @@ class MSGCScheme(Scheme):
                     continue
                 if mt.kind == "d1":
                     local = mt.chunk - i * (self.W - 1)
-                    d1, _ = self._job_state(mt.job)
-                    key = (mt.job, i)
+                    d1, pend, _ = self._job_state(mt.job)
                     if stragglers[i]:
                         if not mt.retry:
-                            self._pending.setdefault(key, []).append(local)
+                            pend[i, local] = True
                         # retry failure: chunk stays at queue head
                     else:
                         d1[i, local] = True
                         if mt.retry:
-                            self._pending[key].pop(0)
-                            if not self._pending[key]:
-                                del self._pending[key]
+                            pend[i, local] = False
                 elif mt.kind == "d2" and not stragglers[i]:
-                    _, d2 = self._job_state(mt.job)
-                    d2[mt.chunk].add(i)
+                    _, _, d2 = self._job_state(mt.job)
+                    d2[mt.chunk, i] = True
 
-    def collect(self, t: int) -> list[JobDecode]:
+    def step(self, t: int, stragglers: np.ndarray) -> None:
+        ok = ~stragglers
+        for j in range(self.slots):
+            job = t - j
+            if not 1 <= job <= self.J:
+                continue
+            d1, pend, d2 = self._job_state(job)
+            if j <= self.W - 2:
+                d1[:, j] |= ok
+                pend[:, j] |= stragglers
+            else:
+                has = pend.any(axis=1)
+                retry_ok = has & ok
+                if retry_ok.any():
+                    w = np.flatnonzero(retry_ok)
+                    head = pend[w].argmax(axis=1)
+                    d1[w, head] = True
+                    pend[w, head] = False
+                if self.lam < self.n:
+                    d2[j - (self.W - 1)] |= ~has & ok
+
+    def _decodable(self, job: int) -> tuple[bool, bool]:
+        d1, d2 = self._d1_done[job], self._d2_returned[job]
+        d1_ok = bool(d1.all())
+        d2_ok = self.lam == self.n or bool(
+            (d2.sum(axis=1) >= self.n - self.lam).all()
+        )
+        return d1_ok, d2_ok
+
+    def collect_jobs(self, t: int) -> list[tuple[int, int]]:
         out = []
         lo = max(1, t - self.T)
         for job in range(lo, min(t, self.J) + 1):
             if job in self._done or job not in self._d1_done:
                 continue
-            d1, d2 = self._d1_done[job], self._d2_returned[job]
-            d1_ok = bool(d1.all())
-            d2_ok = self.lam == self.n or all(
-                len(g) >= self.n - self.lam for g in d2
-            )
+            d1_ok, d2_ok = self._decodable(job)
             if d1_ok and d2_ok:
-                gw = {}
-                if self.lam < self.n:
-                    for m in range(self.B):
-                        beta = self.code.decode_vector(sorted(d2[m]))
-                        gw[m] = {
-                            w: float(beta[w]) for w in d2[m] if beta[w] != 0.0
-                        }
                 self._done[job] = t
-                out.append(
-                    JobDecode(
-                        job=job,
-                        round_done=t,
-                        d1_workers=list(range(self.n)),
-                        group_weights=gw,
-                    )
-                )
+                out.append((job, t))
             elif job == t - self.T:
                 raise AssertionError(
                     f"M-SGC: job {job} missed deadline round {t} "
                     f"(d1_ok={d1_ok}, d2_ok={d2_ok}); "
                     "caller violated the wait-out contract"
                 )
+        return out
+
+    def collect(self, t: int) -> list[JobDecode]:
+        out = []
+        for job, done_round in self.collect_jobs(t):
+            gw = {}
+            if self.lam < self.n:
+                d2 = self._d2_returned[job]
+                for m in range(self.B):
+                    surv = np.flatnonzero(d2[m])
+                    beta = self.code.decode_vector(surv)
+                    gw[m] = {
+                        int(w): float(beta[w]) for w in surv if beta[w] != 0.0
+                    }
+            out.append(
+                JobDecode(
+                    job=job,
+                    round_done=done_round,
+                    d1_workers=list(range(self.n)),
+                    group_weights=gw,
+                )
+            )
         return out
 
 
@@ -459,11 +574,20 @@ class NoCodingScheme(Scheme):
                 raise AssertionError("uncoded scheme tolerates no stragglers")
             self._returned[t] = set(range(self.n))
 
-    def collect(self, t: int) -> list[JobDecode]:
+    def step(self, t: int, stragglers: np.ndarray) -> None:
+        self.observe(t, stragglers)  # assign has no side effects
+
+    def collect_jobs(self, t: int) -> list[tuple[int, int]]:
         if t in self._done or not 1 <= t <= self.J:
             return []
         self._done.add(t)
-        return [JobDecode(job=t, round_done=t, d1_workers=list(range(self.n)))]
+        return [(t, t)]
+
+    def collect(self, t: int) -> list[JobDecode]:
+        return [
+            JobDecode(job=job, round_done=r, d1_workers=list(range(self.n)))
+            for job, r in self.collect_jobs(t)
+        ]
 
 
 def make_scheme(name: str, n: int, J: int, **kw) -> Scheme:

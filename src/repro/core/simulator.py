@@ -28,7 +28,13 @@ import numpy as np
 from .schemes import Scheme, make_scheme
 from .straggler import ConformanceGate, GilbertElliotSource
 
-__all__ = ["SimResult", "simulate", "select_parameters", "estimate_alpha"]
+__all__ = [
+    "SimResult",
+    "simulate",
+    "select_parameters",
+    "select_parameters_legacy",
+    "estimate_alpha",
+]
 
 
 @dataclass
@@ -162,7 +168,32 @@ def select_parameters(
     seed: int = 0,
 ) -> Candidate:
     """App.-J selection: replay the probe profile under each candidate
-    parameterization (load-adjusted) and pick the fastest."""
+    parameterization (load-adjusted) and pick the fastest.
+
+    Runs on the vectorized batch engine (``core.batch``); picks the
+    exact same candidate as :func:`select_parameters_legacy`, which is
+    kept as the differential-testing oracle.
+    """
+    from .batch import select_parameters_fast
+
+    return select_parameters_fast(
+        name, n, probe_delays, mu=mu, alpha=alpha, grid=grid, J=J, seed=seed
+    )
+
+
+def select_parameters_legacy(
+    name: str,
+    n: int,
+    probe_delays: np.ndarray,
+    *,
+    mu: float = 1.0,
+    alpha: float | None = None,
+    grid: list[dict] | None = None,
+    J: int | None = None,
+    seed: int = 0,
+) -> Candidate:
+    """Legacy App.-J selection: one full scalar ``simulate`` per grid
+    candidate.  Slow; kept as the oracle for the batch engine."""
     alpha = alpha if alpha is not None else estimate_alpha(n)
     T_probe = probe_delays.shape[0]
     if grid is None:

@@ -19,6 +19,13 @@ Stochastic ground truth:
 
 Patterns are ``bool`` arrays of shape ``(rounds, n)`` with ``True`` =
 straggler (``S_i(t)`` in the paper, transposed to time-major).
+
+All models here are *closed under contiguous sub-patterns*: a pattern
+that conforms keeps conforming when rows are removed from either end.
+That closure is what makes single-suffix-window incremental admission
+(``suffix_ok`` / ``ConformanceGate``) equivalent to re-validating every
+window touching the new round, and it lets every check be a handful of
+NumPy reductions instead of nested Python loops.
 """
 
 from __future__ import annotations
@@ -42,26 +49,62 @@ __all__ = [
 ]
 
 
+def _window_any(pat: np.ndarray, W: int) -> np.ndarray:
+    """Per full length-W window: does worker i straggle at all in it?
+
+    Returns bool of shape ``(max(rounds - W + 1, 1), n)``.  Trailing
+    partial windows are row-subsets of the last full window, so (by
+    sub-pattern closure) they never need separate checking.
+    """
+    rounds = pat.shape[0]
+    if rounds <= W:
+        return pat.any(axis=0, keepdims=True)
+    cs = np.zeros((rounds + 1, pat.shape[1]), dtype=np.int64)
+    np.cumsum(pat, axis=0, out=cs[1:])
+    return (cs[W:] - cs[:-W]) > 0
+
+
+def _window_sum(pat: np.ndarray, W: int) -> np.ndarray:
+    """Per full length-W window: straggling-round count per worker."""
+    rounds = pat.shape[0]
+    if rounds <= W:
+        return pat.sum(axis=0, keepdims=True)
+    cs = np.zeros((rounds + 1, pat.shape[1]), dtype=np.int64)
+    np.cumsum(pat, axis=0, out=cs[1:])
+    return cs[W:] - cs[:-W]
+
+
 class StragglerModel:
     """Interface: validate a full pattern or check incremental conformance."""
 
     def conforms(self, pattern: np.ndarray) -> bool:
         raise NotImplementedError
 
+    def suffix_ok(self, win: np.ndarray) -> bool:
+        """Is the trailing window ``win`` (bool[<=W, n], last row = the
+        candidate round) admissible, assuming every earlier window was
+        validated when its own last row was committed?
+
+        By sub-pattern closure this is just ``conforms`` on the suffix;
+        windowed models override it with a single-window array check.
+        """
+        return self.conforms(win)
+
     def admits_round(self, history: np.ndarray, candidate: np.ndarray) -> bool:
         """Would appending ``candidate`` (bool[n]) keep the pattern valid?
 
         Only windows touching the new round need rechecking; models here
-        are windowed, so we validate the suffix.
+        are windowed, so validating the length-W suffix suffices.
         """
-        rounds = history.shape[0] if history.size else 0
-        ext = (
-            np.concatenate([history, candidate[None]], axis=0)
-            if rounds
-            else candidate[None].copy()
-        )
         w = self.window
-        return self.conforms(ext[max(0, ext.shape[0] - w) :])
+        rounds = history.shape[0] if history.size else 0
+        tail = history[max(0, rounds - (w - 1)) :] if rounds else None
+        win = (
+            np.concatenate([tail, candidate[None]], axis=0)
+            if tail is not None and tail.shape[0]
+            else candidate[None]
+        )
+        return self.suffix_ok(win)
 
     @property
     def window(self) -> int:
@@ -93,18 +136,29 @@ class BurstyModel(StragglerModel):
             raise ValueError("lam must be >= 0")
 
     def conforms(self, pattern: np.ndarray) -> bool:
-        rounds, _ = pattern.shape
-        for j in range(rounds):  # window [j : j + W - 1]
-            win = pattern[j : j + self.W]
-            # spatial: <= lam distinct stragglers in the window
-            if int(win.any(axis=0).sum()) > self.lam:
+        pat = np.asarray(pattern, dtype=bool)
+        if pat.shape[0] == 0:
+            return True
+        # spatial: <= lam distinct stragglers in every window
+        if int(_window_any(pat, self.W).sum(axis=1).max()) > self.lam:
+            return False
+        # temporal: per worker, straggling rounds in a common window span
+        # < B.  Two rounds share a window iff they are <= W-1 apart, so a
+        # violation is exactly a pair of straggles d in [B, W-1] apart.
+        for d in range(self.B, min(self.W, pat.shape[0])):
+            if (pat[:-d] & pat[d:]).any():
                 return False
-            # temporal: per worker, straggling rounds span < B
-            for i in np.flatnonzero(win.any(axis=0)):
-                rs = np.flatnonzero(win[:, i])
-                if rs[-1] - rs[0] >= self.B:
-                    return False
         return True
+
+    def suffix_ok(self, win: np.ndarray) -> bool:
+        if int(win.any(axis=0).sum()) > self.lam:
+            return False
+        T = win.shape[0]
+        idx = np.arange(T)[:, None]
+        first = np.where(win, idx, T).min(axis=0)
+        last = np.where(win, idx, -1).max(axis=0)
+        # inactive workers give last - first = -1 - T < B automatically
+        return bool((last - first < self.B).all())
 
     @property
     def window(self) -> int:
@@ -118,14 +172,17 @@ class ArbitraryModel(StragglerModel):
     lam: int
 
     def conforms(self, pattern: np.ndarray) -> bool:
-        rounds, _ = pattern.shape
-        for j in range(rounds):
-            win = pattern[j : j + self.W]
-            if int(win.any(axis=0).sum()) > self.lam:
-                return False
-            if int(win.sum(axis=0).max(initial=0)) > self.N:
-                return False
-        return True
+        pat = np.asarray(pattern, dtype=bool)
+        if pat.shape[0] == 0:
+            return True
+        if int(_window_any(pat, self.W).sum(axis=1).max()) > self.lam:
+            return False
+        return int(_window_sum(pat, self.W).max()) <= self.N
+
+    def suffix_ok(self, win: np.ndarray) -> bool:
+        if int(win.any(axis=0).sum()) > self.lam:
+            return False
+        return int(win.sum(axis=0).max(initial=0)) <= self.N
 
     @property
     def window(self) -> int:
@@ -183,23 +240,64 @@ class WindowwiseOr(StragglerModel):
     (members restricted to that window) — Prop 3.1's tolerance class for
     SR-SGC: each window is bursty-conforming OR has <= s stragglers per
     round.  Window predicates are local, so suffix-based incremental
-    admission is sound.
+    admission is sound.  Members must be closed under contiguous
+    sub-patterns (all models in this module are), which lets both
+    ``conforms`` and ``suffix_ok`` check only full windows.
     """
 
     members: tuple
     W: int
 
     def conforms(self, pattern: np.ndarray) -> bool:
-        rounds = pattern.shape[0]
-        for j in range(rounds):
-            win = pattern[j : j + self.W]
+        pat = np.asarray(pattern, dtype=bool)
+        rounds = pat.shape[0]
+        if rounds == 0:
+            return True
+        for j in range(max(rounds - self.W, 0) + 1):
+            win = pat[j : j + self.W]
             if not any(m.conforms(win) for m in self.members):
                 return False
         return True
 
+    def suffix_ok(self, win: np.ndarray) -> bool:
+        return any(m.conforms(win) for m in self.members)
+
     @property
     def window(self) -> int:
         return self.W
+
+
+class _ModelTracker:
+    """O(1)-per-round rolling conformance state for one windowed model.
+
+    Keeps only the last ``window - 1`` committed rounds in a fixed
+    ring-shifted buffer; ``admits`` is a single vectorized suffix-window
+    check instead of re-scanning (and re-concatenating) the whole
+    history every round.
+    """
+
+    def __init__(self, model: StragglerModel, n: int):
+        self.model = model
+        self.w = model.window
+        self.buf = np.zeros((self.w - 1, n), dtype=bool)
+        self.filled = 0  # committed rounds, saturating at w - 1
+
+    def admits(self, candidate: np.ndarray) -> bool:
+        k = min(self.filled, self.w - 1)
+        if k:
+            win = np.concatenate(
+                [self.buf[self.w - 1 - k :], candidate[None]], axis=0
+            )
+        else:
+            win = candidate[None]
+        return self.model.suffix_ok(win)
+
+    def commit(self, candidate: np.ndarray) -> None:
+        if self.w > 1:
+            self.buf[:-1] = self.buf[1:]
+            self.buf[-1] = candidate
+        if self.filled < self.w - 1:
+            self.filled += 1
 
 
 class ConformanceGate:
@@ -211,6 +309,9 @@ class ConformanceGate:
     ``admit(candidate)`` returns True and commits the round if the
     pattern stays admissible; the caller waits out all stragglers (and
     calls ``admit(zeros)``, which always succeeds) otherwise.
+
+    Per-member state is a rolling ``_ModelTracker``, so each round costs
+    O(window * n) array ops regardless of how long the run is.
     """
 
     def __init__(self, model: StragglerModel, n: int):
@@ -219,30 +320,45 @@ class ConformanceGate:
         else:
             self.members = [model]
         self.alive = [True] * len(self.members)
-        self.history = np.zeros((0, n), dtype=bool)
         self.n = n
+        self._trackers = [_ModelTracker(m, n) for m in self.members]
+        self._rows: list[np.ndarray] = []
+        self._history_cache: np.ndarray | None = None
+
+    @property
+    def history(self) -> np.ndarray:
+        """Effective pattern committed so far, (rounds, n) bool."""
+        if self._history_cache is None:
+            if self._rows:
+                self._history_cache = np.array(self._rows, dtype=bool)
+            else:
+                self._history_cache = np.zeros((0, self.n), dtype=bool)
+        return self._history_cache
+
+    def _commit(self, row: np.ndarray) -> None:
+        row = row.copy()
+        self._rows.append(row)
+        self._history_cache = None
+        for tr in self._trackers:
+            tr.commit(row)
 
     def admit(self, candidate: np.ndarray) -> bool:
         ok = [
             i
-            for i, m in enumerate(self.members)
-            if self.alive[i] and m.admits_round(self.history, candidate)
+            for i, tr in enumerate(self._trackers)
+            if self.alive[i] and tr.admits(candidate)
         ]
         if not ok:
             return False
         self.alive = [i in ok for i in range(len(self.members))]
-        self.history = np.concatenate(
-            [self.history, candidate[None]], axis=0
-        )
+        self._commit(candidate)
         return True
 
     def force(self, candidate: np.ndarray) -> None:
         """Commit a round unconditionally (used for the all-clear row
         after a wait-out; zeros can never violate any model)."""
         assert not candidate.any()
-        self.history = np.concatenate(
-            [self.history, candidate[None]], axis=0
-        )
+        self._commit(candidate)
 
     def admit_partial(
         self, candidate: np.ndarray, cost: np.ndarray
@@ -263,20 +379,18 @@ class ConformanceGate:
         while cand.any():
             ok = [
                 i
-                for i, m in enumerate(self.members)
-                if self.alive[i] and m.admits_round(self.history, cand)
+                for i, tr in enumerate(self._trackers)
+                if self.alive[i] and tr.admits(cand)
             ]
             if ok:
                 self.alive = [i in ok for i in range(len(self.members))]
-                self.history = np.concatenate(
-                    [self.history, cand[None]], axis=0
-                )
+                self._commit(cand)
                 return cand, waited
             on = np.flatnonzero(cand)
             drop = on[np.argmin(cost[on])]
             cand[drop] = False
             waited.append(int(drop))
-        self.history = np.concatenate([self.history, cand[None]], axis=0)
+        self._commit(cand)
         return cand, waited
 
 
@@ -313,13 +427,16 @@ class GilbertElliotSource:
         return self.base_time * self.compute_scale
 
     def sample_pattern(self, rounds: int) -> np.ndarray:
+        # NB: the RNG draw ORDER (one init draw, then one (rounds, n)
+        # block in C order) is a compatibility contract — see
+        # tests/test_determinism.py before reordering anything here.
         rng = np.random.default_rng(self.seed)
         state = rng.random(self.n) < self.p_ns / (self.p_ns + self.p_sn)
+        flips = rng.random((rounds, self.n))
         out = np.zeros((rounds, self.n), dtype=bool)
         for t in range(rounds):
             out[t] = state
-            flip = rng.random(self.n)
-            state = np.where(state, flip >= self.p_sn, flip < self.p_ns)
+            state = np.where(state, flips[t] >= self.p_sn, flips[t] < self.p_ns)
         return out
 
     def sample_delays(self, rounds: int) -> np.ndarray:
@@ -368,30 +485,31 @@ def fit_gilbert_elliot(pattern: np.ndarray) -> dict:
     }
 
 
+def burst_lengths(pattern: np.ndarray) -> np.ndarray:
+    """All straggling-run lengths in ``pattern``, worker-major then
+    time-ordered (vectorized run-length extraction)."""
+    pat = np.asarray(pattern, dtype=bool)
+    padded = np.zeros((pat.shape[0] + 2, pat.shape[1]), dtype=bool)
+    padded[1:-1] = pat
+    starts = ~padded[:-1] & padded[1:]
+    ends = padded[:-1] & ~padded[1:]
+    _, s_pos = np.nonzero(starts.T)
+    _, e_pos = np.nonzero(ends.T)
+    return e_pos - s_pos
+
+
 def suggest_parameters(pattern: np.ndarray, *, quantile: float = 0.95) -> dict:
     """Design-model parameters implied by an observed pattern: smallest
     B covering the burst-length quantile, and per-window distinct
     straggler counts for candidate W (how the paper's Remark-J.1 rule of
     thumb is grounded in data)."""
     pat = np.asarray(pattern, dtype=bool)
-    bursts = []
-    for i in range(pat.shape[1]):
-        run = 0
-        for t in range(pat.shape[0]):
-            if pat[t, i]:
-                run += 1
-            elif run:
-                bursts.append(run)
-                run = 0
-        if run:
-            bursts.append(run)
-    bursts = np.asarray(bursts) if bursts else np.asarray([0])
+    bursts = burst_lengths(pat)
+    if bursts.size == 0:
+        bursts = np.asarray([0])
     B = int(np.quantile(bursts, quantile)) or 1
     lam_by_W = {}
     for W in (B + 1, 2 * B + 1, 3 * B + 1):
-        counts = [
-            int(pat[j : j + W].any(axis=0).sum())
-            for j in range(max(pat.shape[0] - W + 1, 1))
-        ]
+        counts = _window_any(pat, W).sum(axis=1)
         lam_by_W[W] = int(np.quantile(counts, quantile))
     return {"B": B, "lam_by_W": lam_by_W, "burst_q": float(np.quantile(bursts, quantile))}

@@ -6,6 +6,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from _arch import arch_params
 from repro.configs import ARCHS, get_config, get_smoke
 from repro.models import decode_step, forward, init_cache, init_params, loss_fn
 
@@ -44,7 +45,7 @@ def make_batch(cfg, b=B, s=S):
     }
 
 
-@pytest.mark.parametrize("arch", ARCHS)
+@pytest.mark.parametrize("arch", arch_params(ARCHS))
 def test_smoke_forward_shapes(arch):
     cfg = get_smoke(arch)
     params = init_params(cfg, KEY)
@@ -56,7 +57,7 @@ def test_smoke_forward_shapes(arch):
     assert np.isfinite(float(aux))
 
 
-@pytest.mark.parametrize("arch", ARCHS)
+@pytest.mark.parametrize("arch", arch_params(ARCHS))
 def test_smoke_train_step(arch):
     """One SGD step decreases nothing NaN-wise and produces finite grads."""
     cfg = get_smoke(arch)
@@ -74,7 +75,7 @@ def test_smoke_train_step(arch):
 
 @pytest.mark.parametrize(
     "arch",
-    [a for a in ARCHS if get_smoke(a).has_decode],
+    arch_params([a for a in ARCHS if get_smoke(a).has_decode]),
 )
 def test_smoke_decode_step(arch):
     cfg = get_smoke(arch)

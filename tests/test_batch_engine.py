@@ -1,0 +1,152 @@
+"""Differential tests: the vectorized batch engine must reproduce the
+legacy scalar simulator bit-for-bit.
+
+``simulate`` (+ ``assign``/``observe``/``collect`` + suffix-rescanning
+gate) is the oracle; ``simulate_fast`` / ``simulate_batch`` (+
+``step``/``collect_jobs`` + rolling-tracker gate + broadcast round
+precompute) must match every ``SimResult`` field exactly — not to a
+tolerance — across all four schemes, several seeds, and both wait-out
+modes.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    GilbertElliotSource,
+    estimate_alpha,
+    make_scheme,
+    select_parameters,
+    select_parameters_legacy,
+    simulate,
+    simulate_batch,
+    simulate_fast,
+)
+
+GE = dict(p_ns=0.08, p_sn=0.6, slow_factor=6.0)
+
+CONFIGS = [
+    ("gc", dict(s=3)),                     # 4 | 12 -> GC-Rep
+    ("gc", dict(s=3, prefer_rep=False)),   # general code
+    ("gc", dict(s=4)),                     # 5 does not divide 12 -> general
+    ("sr-sgc", dict(B=1, W=2, lam=3)),
+    ("sr-sgc", dict(B=2, W=3, lam=5)),
+    ("m-sgc", dict(B=1, W=2, lam=3)),
+    ("m-sgc", dict(B=2, W=3, lam=5)),
+    ("m-sgc", dict(B=1, W=3, lam=12)),     # lam == n (Remark 3.2, no D2)
+    ("uncoded", {}),
+]
+
+
+def _assert_identical(ra, rb):
+    assert ra.scheme == rb.scheme
+    assert ra.total_time == rb.total_time
+    assert (ra.round_times == rb.round_times).all()
+    assert ra.job_done_round == rb.job_done_round
+    assert ra.job_done_time == rb.job_done_time
+    assert ra.waitouts == rb.waitouts
+    assert ra.effective_pattern.shape == rb.effective_pattern.shape
+    assert (ra.effective_pattern == rb.effective_pattern).all()
+    assert ra.normalized_load == rb.normalized_load
+
+
+@pytest.mark.parametrize("name,kw", CONFIGS,
+                         ids=[f"{n}-{i}" for i, (n, _) in enumerate(CONFIGS)])
+@pytest.mark.parametrize("waitout", ["selective", "all"])
+@pytest.mark.parametrize("seed", [0, 1, 7])
+def test_fast_matches_legacy_bitforbit(name, kw, waitout, seed):
+    n, J = 12, 25
+    src = GilbertElliotSource(n=n, seed=seed, **GE)
+    sch = make_scheme(name, n, J, **dict(kw))
+    delays = src.sample_delays(J + sch.T + 1)
+    alpha = estimate_alpha(src)
+    ra = simulate(sch, delays, mu=1.0, alpha=alpha, J=J, waitout=waitout)
+    rb = simulate_fast(make_scheme(name, n, J, **dict(kw)), delays,
+                       mu=1.0, alpha=alpha, J=J, waitout=waitout)
+    _assert_identical(ra, rb)
+    # a straggler-heavy run is only meaningful if the gate actually fired
+    if name != "uncoded" and waitout == "selective":
+        assert ra.waitouts > 0 or ra.effective_pattern.any()
+
+
+def test_fast_matches_legacy_table1_point():
+    """Spot check at the paper's n=256 operating point."""
+    n, J = 256, 8
+    src = GilbertElliotSource(n=n, seed=0, p_ns=0.035, p_sn=0.85,
+                              slow_factor=6.0, jitter=0.05)
+    delays = src.sample_delays(J + 4)
+    alpha = estimate_alpha(src)
+    for name, kw in [("m-sgc", dict(B=2, W=3, lam=27)),
+                     ("sr-sgc", dict(B=2, W=3, lam=23)),
+                     ("gc", dict(s=15))]:
+        ra = simulate(make_scheme(name, n, J, **dict(kw)), delays,
+                      mu=1.0, alpha=alpha, J=J)
+        rb = simulate_fast(make_scheme(name, n, J, **dict(kw)), delays,
+                           mu=1.0, alpha=alpha, J=J)
+        _assert_identical(ra, rb)
+
+
+def test_simulate_batch_matches_scalar_runs():
+    """Every cell of a (specs x seeds x traces) grid equals the scalar
+    fast run (which equals the oracle by the tests above)."""
+    n = 12
+    specs = [("m-sgc", {"B": 1, "W": 2, "lam": 3}), ("gc", {"s": 3})]
+    traces = np.stack([
+        GilbertElliotSource(n=n, seed=10 + k, **GE).sample_delays(20)
+        for k in range(2)
+    ])
+    seeds = (0, 5)
+    grid = simulate_batch(specs, traces, seeds=seeds, alpha=4.0)
+    assert grid.shape == (len(specs), len(seeds), traces.shape[0])
+    for i, (name, params) in enumerate(specs):
+        for k, seed in enumerate(seeds):
+            for t in range(traces.shape[0]):
+                res = grid[i, k, t]
+                J = res.rounds - make_scheme(name, n, 1, seed=seed,
+                                             **dict(params)).T
+                ref = simulate(
+                    make_scheme(name, n, J, seed=seed, **dict(params)),
+                    traces[t], alpha=4.0, J=J,
+                )
+                _assert_identical(ref, res)
+
+
+def test_simulate_batch_strict_false_marks_infeasible():
+    n = 12
+    specs = [("sr-sgc", {"B": 2, "W": 4, "lam": 3}),   # B does not divide W-1
+             ("gc", {"s": 3})]
+    traces = GilbertElliotSource(n=n, seed=1, **GE).sample_delays(15)[None]
+    grid = simulate_batch(specs, traces, alpha=4.0, strict=False)
+    assert grid[0, 0, 0] is None
+    assert grid[1, 0, 0] is not None
+    with pytest.raises(ValueError):
+        simulate_batch(specs, traces, alpha=4.0, strict=True)
+
+
+def test_select_parameters_matches_legacy_oracle():
+    """Rewritten App.-J selection picks the identical candidate (params,
+    load AND per-job estimate) as the per-candidate legacy loop."""
+    n = 16
+    delays = GilbertElliotSource(n=n, seed=3).sample_delays(24)
+    grids = {
+        "gc": None,  # default grid
+        "m-sgc": [{"B": B, "W": B + 1, "lam": lam}
+                  for B in (1, 2) for lam in (2, 4, 8)],
+        "sr-sgc": [{"B": B, "W": B + 1, "lam": lam}
+                   for B in (1, 2) for lam in (2, 4, 8)],
+    }
+    for name, grid in grids.items():
+        fast = select_parameters(name, n, delays, grid=grid)
+        legacy = select_parameters_legacy(name, n, delays, grid=grid)
+        assert fast.params == legacy.params, name
+        assert fast.load == legacy.load, name
+        assert fast.est_time == legacy.est_time, name
+
+
+def test_fast_path_skips_decode_and_minitasks():
+    """The load-only path must not trigger the O(n^3) encode build."""
+    n, J = 12, 10
+    sch = make_scheme("gc", n, J, s=4)  # general code (5 does not divide 12)
+    delays = GilbertElliotSource(n=n, seed=2, **GE).sample_delays(J + 1)
+    simulate_fast(sch, delays, alpha=4.0, J=J)
+    assert sch.code._matrix is None, "fast path built the encode matrix"

@@ -8,6 +8,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from _arch import arch_params
 from repro.configs import ARCHS, get_smoke
 from repro.models import decode_step, forward, init_cache, init_params
 
@@ -17,7 +18,7 @@ DECODE_ARCHS = [
 ]
 
 
-@pytest.mark.parametrize("arch", DECODE_ARCHS)
+@pytest.mark.parametrize("arch", arch_params(DECODE_ARCHS))
 def test_decode_matches_forward(arch):
     cfg = get_smoke(arch)
     b, s = 2, 12

@@ -3,8 +3,7 @@ effective history stays inside the design envelope (Remark 2.3), and
 selective wait-outs never wait more workers than the all-workers rule."""
 
 import numpy as np
-from hypothesis import HealthCheck, given, settings
-from hypothesis import strategies as st
+from _prop import HealthCheck, given, settings, st
 
 from repro.core.straggler import (
     ArbitraryModel,

@@ -5,6 +5,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from _arch import arch_params
 from repro.configs import ARCHS, get_smoke
 from repro.models import decode_step, forward, generate, init_params, prefill
 from repro.train import run_adaptive
@@ -13,9 +14,12 @@ DECODE_ARCHS = [
     a for a in ARCHS
     if get_smoke(a).has_decode and get_smoke(a).frontend == "none"
 ]
+# prefill/decode parity is the priciest matrix: tier-1 keeps just one
+# attention and one SSM representative (the rest are `-m slow`)
+FAST_DECODE = {"qwen2-0.5b", "mamba2-1.3b"}
 
 
-@pytest.mark.parametrize("arch", DECODE_ARCHS)
+@pytest.mark.parametrize("arch", arch_params(DECODE_ARCHS, fast=FAST_DECODE))
 def test_prefill_then_decode_matches_forward(arch):
     """Prefill the first k tokens, decode the rest one-by-one; logits
     must match the full-sequence forward at every position."""
@@ -44,7 +48,11 @@ def test_prefill_then_decode_matches_forward(arch):
     )
 
 
-@pytest.mark.parametrize("arch", ["llama3.2-1b", "mamba2-1.3b", "zamba2-2.7b"])
+@pytest.mark.parametrize(
+    "arch",
+    arch_params(["llama3.2-1b", "mamba2-1.3b", "zamba2-2.7b"],
+                fast={"mamba2-1.3b"}),
+)
 def test_generate_shapes(arch):
     cfg = get_smoke(arch)
     params = init_params(cfg, jax.random.PRNGKey(0))
@@ -59,10 +67,10 @@ def test_adaptive_switchover_trains():
     """App. K.2 / Fig. 18: probe uncoded, switch to coded, keep state."""
     from repro.core import GilbertElliotSource
 
-    n, J = 12, 36
+    n, J = 12, 24
     delays = GilbertElliotSource(n=n, p_ns=0.06, p_sn=0.8, seed=5).sample_delays(J + 6)
     total, probe, params, drv = run_adaptive(
-        2, J, delays, scheme_name="m-sgc", t_probe=12, batch_size=96,
+        2, J, delays, scheme_name="m-sgc", t_probe=8, batch_size=96,
         grid=[{"B": 1, "W": 2, "lam": l} for l in (2, 3, 4)],
     )
     assert probe < total

@@ -2,8 +2,7 @@
 
 import numpy as np
 import pytest
-from hypothesis import HealthCheck, given, settings
-from hypothesis import strategies as st
+from _prop import HealthCheck, given, settings, st
 
 from repro.core import GilbertElliotSource, estimate_alpha, make_scheme, simulate
 from repro.core.executor import conforming_pattern, run_protocol

@@ -4,8 +4,7 @@ deadline and numeric equality with the uncoded full gradient."""
 
 import numpy as np
 import pytest
-from hypothesis import HealthCheck, given, settings
-from hypothesis import strategies as st
+from _prop import HealthCheck, given, settings, st
 
 from repro.core import make_scheme
 from repro.core.executor import conforming_pattern, run_protocol
