@@ -338,6 +338,69 @@ def bench_batch_speedup():
         assert speedup >= 10.0, f"batch engine only {speedup:.1f}x faster"
 
 
+def bench_lockstep(repeats: int = 3):
+    """Lockstep-engine acceptance: an App-J-sized (specs x traces) grid
+    at n=256 through `simulate_batch` (one lockstep batch per spec)
+    must beat the PR-1 per-cell `simulate_fast` loop by >= 5x while
+    producing bit-identical `SimResult`s in every cell."""
+    from repro.core import simulate_lockstep
+    from repro.core.simulator import params_delay
+
+    num_traces, rounds = 64, 44
+    traces = np.stack(
+        [_source(SEED + 60 + k).sample_delays(rounds) for k in range(num_traces)]
+    )
+    alpha = estimate_alpha(_source())
+    names = ("m-sgc", "sr-sgc", "gc", "uncoded")
+    Js = {nm: rounds - params_delay(nm, PARAMS[nm]) for nm in names}
+
+    # per-cell fast loop (the PR-1 path); best-of-2 so scheduler noise
+    # on a loaded runner skews neither side of the ratio
+    t_cell = float("inf")
+    for _ in range(2):
+        t0 = time.perf_counter()
+        cell_results = {
+            nm: [
+                simulate_fast(make_scheme(nm, N_WORKERS, Js[nm], **PARAMS[nm]),
+                              traces[ti], mu=MU, alpha=alpha, J=Js[nm])
+                for ti in range(num_traces)
+            ]
+            for nm in names
+        }
+        t_cell = min(t_cell, time.perf_counter() - t0)
+
+    # lockstep engine: one untimed warmup (allocator/caches), then
+    # best-of-N so scheduler noise on a loaded CI runner can't drag
+    # the observed ~6x margin near the 5x gate
+    simulate_lockstep("gc", PARAMS["gc"], traces[:8], mu=MU, alpha=alpha,
+                      J=Js["gc"])
+    t_lock = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        lock_results = {
+            nm: simulate_lockstep(nm, PARAMS[nm], traces, mu=MU, alpha=alpha,
+                                  J=Js[nm])
+            for nm in names
+        }
+        t_lock = min(t_lock, time.perf_counter() - t0)
+
+    for nm in names:
+        for ra, rb in zip(cell_results[nm], lock_results[nm]):
+            assert ra.total_time == rb.total_time
+            assert (ra.round_times == rb.round_times).all()
+            assert ra.job_done_round == rb.job_done_round
+            assert ra.job_done_time == rb.job_done_time
+            assert ra.waitouts == rb.waitouts
+            assert (ra.effective_pattern == rb.effective_pattern).all()
+    sims = len(names) * num_traces
+    speedup = t_cell / t_lock
+    print(f"lockstep.grid,{sims},(specs x traces) cells at n={N_WORKERS}")
+    print(f"lockstep.percell_s,{t_cell:.3f},PR-1 simulate_fast loop")
+    print(f"lockstep.lockstep_s,{t_lock:.3f},bit-identical results")
+    print(f"lockstep.speedup,{speedup:.1f},acceptance >= 5x")
+    assert speedup >= 5.0, f"lockstep engine only {speedup:.1f}x faster"
+
+
 def bench_batch_montecarlo():
     """Monte-Carlo scheme comparison on the batch engine: Table-1
     operating points x independent GE traces in one simulate_batch
@@ -387,6 +450,7 @@ BENCHES = {
     "appg": bench_appg_rep,
     "batch": bench_batch_speedup,
     "batchmc": bench_batch_montecarlo,
+    "lockstep": bench_lockstep,
     "roofline": bench_roofline,
 }
 

@@ -1,9 +1,11 @@
-"""Grid sweep on the vectorized batch engine.
+"""Grid sweep on the lockstep batch engine.
 
-Sweeps (scheme parameters x seeds x GE traces) through
-``simulate_batch`` in one call, then reports the fastest
-parameterization per scheme — the Monte-Carlo version of the paper's
-App.-J probe procedure (what Table 1 / Figs. 15-18 aggregate).
+Sweeps (scheme parameters x GE traces) through ``simulate_batch`` —
+every trace of a spec advances through the functional scheme kernels
+in lockstep (struct-of-arrays state, math behind the ``core.backend``
+shim) — then reports the fastest parameterization per scheme: the
+Monte-Carlo version of the paper's App.-J probe procedure (what
+Table 1 / Figs. 15-18 aggregate).
 
     PYTHONPATH=src python examples/parameter_sweep.py [n] [rounds]
 """
@@ -13,14 +15,23 @@ import time
 
 import numpy as np
 
-from repro.core import GilbertElliotSource, estimate_alpha, simulate_batch
+from repro.core import (
+    GilbertElliotSource,
+    estimate_alpha,
+    get_backend,
+    simulate_batch,
+)
 
 n = int(sys.argv[1]) if len(sys.argv) > 1 else 64
 rounds = int(sys.argv[2]) if len(sys.argv) > 2 else 60
 
+print(f"kernel backend: {get_backend().name} "
+      f"(array namespace {get_backend().xp.__name__})")
+
 # several independent GE traces of the Fig.-1-calibrated cluster
 # (traces are the Monte-Carlo axis: load-only sim results are
-# seed-invariant, see simulate_batch's docstring)
+# seed-invariant and the engine broadcasts across the seed axis,
+# see simulate_batch's docstring)
 sources = [
     GilbertElliotSource(n=n, seed=100 + k, p_ns=0.035, p_sn=0.85,
                         slow_factor=6.0, jitter=0.05)

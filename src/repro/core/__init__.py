@@ -1,17 +1,22 @@
 """Core library: sequential gradient coding (the paper's contribution).
 
-Two simulation paths cover every workload:
+Three simulation paths cover every workload:
 
 * **Legacy scalar path** — ``simulate`` + ``Scheme.assign/observe/
   collect``: materializes ``MiniTask`` descriptors and decode weights;
   what the coded trainer consumes, and the differential-testing oracle.
-* **Vectorized batch engine** (``core.batch``) — ``simulate_fast`` is a
-  bit-for-bit drop-in for ``simulate`` on the schemes' load-only fast
-  path (``Scheme.step``/``collect_jobs``), and ``simulate_batch`` runs
-  a whole (specs x seeds x traces) grid with the per-round timing math
-  done in one broadcast NumPy pass.  ``select_parameters`` (App. J)
-  runs on this engine; ``select_parameters_legacy`` keeps the old
-  per-candidate loop as the oracle.
+* **Fast scalar path** — ``simulate_fast`` is a bit-for-bit drop-in
+  for ``simulate`` on the schemes' load-only fast path
+  (``Scheme.step``/``collect_jobs``: single-cell wrappers over the
+  functional kernels in ``core.kernel``).
+* **Lockstep batch engine** (``core.batch`` + ``core.kernel``) —
+  ``simulate_batch`` runs a whole (specs x seeds x traces) grid with
+  every trace of a spec advancing through the batched struct-of-arrays
+  kernels in lockstep (math behind the ``core.backend`` shim: numpy
+  now, jax-swappable).  ``select_parameters`` (App. J) runs on this
+  engine; ``select_parameters_legacy`` keeps the old per-candidate
+  loop as the oracle.  See docs/scheme_kernels.md for the kernel
+  protocol and how to add a scheme.
 
 Typical sweep::
 
@@ -24,11 +29,21 @@ Typical sweep::
     total = results[0, 0, 0].total_time
 """
 
+from .backend import available_backends, get_backend, set_backend, use_backend
 from .batch import (
     precompute_rounds,
     select_parameters_fast,
     simulate_batch,
     simulate_fast,
+    simulate_lockstep,
+)
+from .kernel import (
+    GateKernel,
+    SchemeKernel,
+    SchemeState,
+    has_kernel,
+    make_kernel,
+    register_kernel,
 )
 from .bounds import (
     load_gc,
@@ -47,6 +62,7 @@ from .schemes import (
     NoCodingScheme,
     SRSGCScheme,
     make_scheme,
+    register_scheme,
 )
 from .simulator import (
     SimResult,
@@ -107,6 +123,18 @@ __all__ = [
     "reference_profile",
     "simulate_fast",
     "simulate_batch",
+    "simulate_lockstep",
     "select_parameters_fast",
     "precompute_rounds",
+    "register_scheme",
+    "SchemeKernel",
+    "SchemeState",
+    "GateKernel",
+    "make_kernel",
+    "register_kernel",
+    "has_kernel",
+    "get_backend",
+    "set_backend",
+    "use_backend",
+    "available_backends",
 ]

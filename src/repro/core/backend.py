@@ -1,0 +1,119 @@
+"""Array-backend shim for the lockstep scheme kernels.
+
+Mirrors the ``kernels/*/ref.py`` vs ``ops.py`` split at the library
+level: every array op in the lockstep hot loop (``core.kernel``) goes
+through the active :class:`Backend` — the array namespace lives in
+``Backend.xp`` and all state updates go through the functional
+``at_set`` / ``at_or`` helpers — so porting the loop to device
+residency is a matter of selecting a backend whose ``xp`` is
+``jax.numpy`` and jitting the step functions, with no scheme-logic
+changes.
+
+The **numpy** backend is the default and is what every bit-for-bit
+guarantee in ``tests/test_lockstep.py`` / ``tests/test_batch_engine.py``
+is stated against (its ``at_*`` helpers mutate in place and return the
+same array, which is safe because kernel states own their arrays).  The
+**jax** backend is registered when jax is importable; its ``at_*``
+helpers are non-mutating (``arr.at[idx].set``), which keeps the kernels
+honest about functional style, but jax numerics are an "allclose"
+contract, not a bit-identical one.
+"""
+
+from __future__ import annotations
+
+import contextlib
+
+import numpy as np
+
+__all__ = [
+    "Backend",
+    "available_backends",
+    "get_backend",
+    "set_backend",
+    "use_backend",
+]
+
+
+class Backend:
+    """One array namespace + functional-update helpers."""
+
+    name: str = "abstract"
+    xp = None
+
+    def at_set(self, arr, idx, val):
+        """Functional ``arr[idx] = val``; returns the updated array."""
+        raise NotImplementedError
+
+    def at_or(self, arr, idx, val):
+        """Functional ``arr[idx] |= val``; returns the updated array."""
+        raise NotImplementedError
+
+    def __repr__(self) -> str:  # pragma: no cover - cosmetic
+        return f"<Backend {self.name}>"
+
+
+class _NumpyBackend(Backend):
+    name = "numpy"
+    xp = np
+
+    def at_set(self, arr, idx, val):
+        arr[idx] = val
+        return arr
+
+    def at_or(self, arr, idx, val):
+        arr[idx] |= val
+        return arr
+
+
+_REGISTRY: dict[str, Backend] = {"numpy": _NumpyBackend()}
+
+try:  # pragma: no cover - exercised only where jax is installed
+    import jax.numpy as jnp
+
+    class _JaxBackend(Backend):
+        name = "jax"
+        xp = jnp
+
+        def at_set(self, arr, idx, val):
+            return arr.at[idx].set(val)
+
+        def at_or(self, arr, idx, val):
+            return arr.at[idx].set(arr[idx] | val)
+
+    _REGISTRY["jax"] = _JaxBackend()
+except Exception:  # noqa: BLE001 - jax absent or broken: numpy-only
+    pass
+
+_ACTIVE = "numpy"
+
+
+def available_backends() -> list[str]:
+    return sorted(_REGISTRY)
+
+
+def get_backend(name: str | None = None) -> Backend:
+    """The active backend (or a specific one by name)."""
+    return _REGISTRY[name or _ACTIVE]
+
+
+def set_backend(name: str) -> Backend:
+    """Select the process-wide default backend for the scheme kernels."""
+    global _ACTIVE
+    if name not in _REGISTRY:
+        raise ValueError(
+            f"unknown backend {name!r}; available: {available_backends()}"
+        )
+    _ACTIVE = name
+    return _REGISTRY[name]
+
+
+@contextlib.contextmanager
+def use_backend(name: str):
+    """Temporarily switch the default backend."""
+    global _ACTIVE
+    prev = _ACTIVE
+    set_backend(name)
+    try:
+        yield _REGISTRY[name]
+    finally:
+        _ACTIVE = prev

@@ -5,23 +5,29 @@ round at a time with descriptor materialization and decode solves; grid
 sweeps (parameter selection, Monte-Carlo scheme comparisons) replay it
 once per candidate and spend almost all their time in Python loops.
 
-This module batches that work:
+This module batches that work at two levels:
 
-* ``precompute_rounds`` / ``_precompute_grid`` — the per-round timing
-  quantities (load-adjusted worker times, kappa, mu-rule cutoff,
-  candidate straggler masks, max times) for a whole (traces x loads)
-  grid in ONE broadcast NumPy pass over a ``(U, rounds, n)`` stack.
-* ``simulate_fast`` — a drop-in replacement for ``simulate`` built on
-  the schemes' load-only fast path (``step``/``collect_jobs``: no
-  ``MiniTask`` objects, no decode-weight solves) and the O(window * n)
-  rolling ``ConformanceGate``.  Bit-for-bit identical ``SimResult``s —
-  the legacy path stays as the differential-testing oracle
-  (``tests/test_batch_engine.py``).
-* ``simulate_batch`` — runs a (specs x seeds x traces) grid, sharing
-  the broadcast precompute across every run with the same (trace, load).
+* ``simulate_fast`` — a drop-in replacement for ``simulate`` on the
+  schemes' load-only fast path (``step``/``collect_jobs``: single-cell
+  kernel wrappers, no ``MiniTask`` objects, no decode-weight solves)
+  and the O(window * n) rolling ``ConformanceGate``.  Bit-for-bit
+  identical ``SimResult``s — the legacy descriptor path stays as the
+  differential-testing oracle (``tests/test_batch_engine.py``).
+* ``simulate_lockstep`` — the **lockstep engine**: every grid cell of
+  one spec (one cell per trace) advances through the same round
+  together, on the functional scheme kernels and batched wait-out gate
+  of ``core.kernel`` (struct-of-arrays state with a leading cells
+  axis).  The per-round Python overhead is paid once per *grid*
+  instead of once per *cell*, and the results stay bit-identical to
+  per-cell ``simulate_fast`` runs (``tests/test_lockstep.py``;
+  speedup gate in ``benchmarks/run.py lockstep``).
+* ``simulate_batch`` — runs a (specs x seeds x traces) grid: one
+  lockstep batch per spec.  Schemes whose load-only stepping ignores
+  the coefficient seed (``seed_sensitive = False``, all paper schemes)
+  run the trace axis ONCE and broadcast the results across the seed
+  axis.
 * ``select_parameters_fast`` — the App.-J probe sweep on top of
-  ``simulate_batch``'s machinery; ``simulator.select_parameters``
-  delegates here.
+  ``simulate_batch``; ``simulator.select_parameters`` delegates here.
 
 Every floating-point expression mirrors the legacy code exactly (same
 ops, same order), so results are reproducible to the bit, not just to a
@@ -34,13 +40,19 @@ from dataclasses import dataclass
 
 import numpy as np
 
+from .kernel import (
+    GateKernel,
+    SchemeKernel,
+    has_kernel,
+    kernel_seed_sensitive,
+    make_kernel,
+)
 from .schemes import Scheme, make_scheme
 from .simulator import (
     Candidate,
     SimResult,
     default_grid,
     estimate_alpha,
-    params_delay,
 )
 from .straggler import ConformanceGate
 
@@ -48,6 +60,7 @@ __all__ = [
     "RoundPrecompute",
     "precompute_rounds",
     "simulate_fast",
+    "simulate_lockstep",
     "simulate_batch",
     "select_parameters_fast",
 ]
@@ -87,27 +100,6 @@ def precompute_rounds(
         cand=cand,
         any_cand=cand.any(axis=1),
     )
-
-
-def _precompute_grid(
-    traces: np.ndarray, pairs: list[tuple[int, float]], mu: float
-) -> list[RoundPrecompute]:
-    """One broadcast pass over every unique (trace, load-extra) pair.
-
-    ``traces``: (num_traces, rounds, n); ``pairs``: (trace_id, extra).
-    """
-    tid = np.asarray([p[0] for p in pairs], dtype=np.int64)
-    ex = np.asarray([p[1] for p in pairs], dtype=np.float64)
-    times = traces[tid] + ex[:, None, None]          # (U, rounds, n)
-    kappa = times.min(axis=2)
-    cutoff = (1.0 + mu) * kappa
-    cand = times > cutoff[..., None]
-    tmax = times.max(axis=2)
-    any_cand = cand.any(axis=2)
-    return [
-        RoundPrecompute(times[i], kappa[i], cutoff[i], tmax[i], cand[i], any_cand[i])
-        for i in range(len(pairs))
-    ]
 
 
 def simulate_fast(
@@ -195,6 +187,152 @@ def simulate_fast(
     )
 
 
+def simulate_lockstep(
+    name: str,
+    params: dict,
+    traces: np.ndarray,
+    *,
+    mu: float = 1.0,
+    alpha: float = 1.0,
+    J: int | None = None,
+    waitout: str = "selective",
+    seed: int = 0,
+    strict: bool = True,
+) -> list[SimResult | None]:
+    """Advance one spec through MANY traces in lockstep.
+
+    One grid cell per trace: the functional kernel state
+    (``core.kernel``) and the batched wait-out gate carry a leading
+    cells axis, so each round of the whole grid is a handful of array
+    ops.  Every per-cell ``SimResult`` is bit-identical to the scalar
+    ``simulate_fast`` run on that trace (and hence to the legacy
+    ``simulate``): the timing math, gate decisions, and elapsed-time
+    accounting replicate the scalar expressions exactly.
+
+    ``traces``: (cells, rounds, n).  ``J = None`` fits ``J + T`` inside
+    the trace (the App-J rule).  With ``strict=False``, cells whose
+    wait-out contract is violated yield ``None`` instead of raising.
+    """
+    traces = np.asarray(traces, dtype=np.float64)
+    if traces.ndim == 2:
+        traces = traces[None]
+    cells, rounds_avail, n = traces.shape
+
+    if J is None:
+        # probe at the trace length (an upper bound on any fitted J, so
+        # constructors that validate J accept it) just to learn T
+        probe = make_scheme(name, n, rounds_avail, seed=seed, **dict(params))
+        J = _grid_J(rounds_avail, probe.T, None, f"{name} {params}")
+    scheme = make_scheme(name, n, J, seed=seed, **dict(params))
+    if J + scheme.T > rounds_avail:
+        # clamp an explicit J to the trace (the App-J rule, same as
+        # _grid_J); callers like simulate_batch pass J pre-clamped
+        J = _grid_J(rounds_avail, scheme.T, J, f"{name} {params}")
+        scheme = make_scheme(name, n, J, seed=seed, **dict(params))
+    kernel = make_kernel(scheme)
+    gate = GateKernel(scheme.design_model, n)
+    state = kernel.init_state(cells)
+    gs = gate.init_state(cells)
+    rounds = J + kernel.T
+
+    inv_n = 1.0 / n
+    rt = np.zeros((cells, rounds))
+    waitouts = np.zeros(cells, dtype=np.int64)
+    job_done_time: list[dict[int, float]] = [{} for _ in range(cells)]
+
+    # constant-load kernels (every paper scheme: round_loads not
+    # overridden) get the whole timing grid in one broadcast pass;
+    # load-adaptive kernels fall back to per-round math
+    const_load = type(kernel).round_loads is SchemeKernel.round_loads
+    if const_load:
+        extra_s = (kernel.normalized_load - inv_n) * alpha
+        times_all = traces[:, :rounds, :] + extra_s
+        kappa_all = times_all.min(axis=2)
+        cutoff_all = (1.0 + mu) * kappa_all
+        tmax_all = times_all.max(axis=2)
+        cand_all = times_all > cutoff_all[..., None]
+        any_all = cand_all.any(axis=2)
+
+    for t in range(1, rounds + 1):
+        k = t - 1
+        # per-round timing math (identical expressions to simulate_fast,
+        # broadcast over cells; loads come from the kernel so
+        # load-adaptive schemes can vary them per cell / per round)
+        if const_load:
+            times, kappa, cutoff = times_all[:, k], kappa_all[:, k], cutoff_all[:, k]
+            tmax, cand, any_cand = tmax_all[:, k], cand_all[:, k], any_all[:, k]
+        else:
+            extra = (kernel.round_loads(state, t) - inv_n) * alpha
+            times = traces[:, k, :] + extra[:, None]
+            kappa = times.min(axis=1)
+            cutoff = (1.0 + mu) * kappa
+            tmax = times.max(axis=1)
+            cand = times > cutoff[:, None]
+            any_cand = cand.any(axis=1)
+        base = np.minimum(cutoff, tmax)
+        if waitout == "selective":
+            gs, eff, waited = gate.admit_partial(gs, cand, times, any_cand)
+            waited_any = waited.any(axis=1)
+            wmax = np.where(waited, times, -np.inf).max(axis=1)
+            dur_w = np.maximum(
+                wmax, np.where(eff.any(axis=1), base, cutoff)
+            )
+            duration = np.where(waited_any, dur_w, base)
+            waitouts += waited_any
+        else:  # App-J fallback: wait out all workers on violation
+            gs, eff, ok_any = gate.admit_all(gs, cand, any_cand)
+            wo = any_cand & ~ok_any
+            duration = np.where(wo, tmax, base)
+            waitouts += wo
+        state = kernel.step(state, t, eff)
+        rt[:, k] = duration
+        # elapsed time for jobs that completed this round; the row-wise
+        # prefix sum replicates the scalar engine's float accounting
+        # (numpy's pairwise summation per contiguous row) to the bit
+        lo, hi = max(1, t - kernel.T), min(t, kernel.J)
+        if hi >= lo:
+            newly = state.done_round[:, lo : hi + 1] == t
+            if newly.any():
+                elapsed = rt[:, :t].sum(axis=1)
+                cs, js = np.nonzero(newly)
+                for c, j in zip(cs.tolist(), js.tolist()):
+                    job_done_time[c][lo + j] = float(elapsed[c])
+        if strict and bool(state.dead.any()):
+            bad = np.flatnonzero(state.dead).tolist()
+            raise AssertionError(
+                f"{kernel.name}: wait-out contract violated at round {t} "
+                f"in cell(s) {bad[:5]}"
+            )
+
+    history = np.stack(gs.history, axis=0) if gs.history else np.zeros(
+        (0, cells, n), dtype=bool
+    )
+    results: list[SimResult | None] = []
+    for c in range(cells):
+        done = state.done_round[c]
+        if bool(state.dead[c]) or not bool((done[1:] != 0).all()):
+            if strict:
+                missing = np.flatnonzero(done[1:] == 0) + 1
+                raise AssertionError(
+                    f"jobs never finished: {missing.tolist()[:5]}..."
+                )
+            results.append(None)
+            continue
+        results.append(
+            SimResult(
+                scheme=kernel.name,
+                total_time=float(rt[c].sum()),
+                round_times=rt[c].copy(),
+                job_done_round={j: int(done[j]) for j in range(1, J + 1)},
+                job_done_time=job_done_time[c],
+                waitouts=int(waitouts[c]),
+                effective_pattern=np.ascontiguousarray(history[:, c]),
+                normalized_load=scheme.normalized_load,
+            )
+        )
+    return results
+
+
 def simulate_batch(
     specs: list[tuple[str, dict]],
     traces: np.ndarray,
@@ -206,7 +344,7 @@ def simulate_batch(
     waitout: str = "selective",
     strict: bool = True,
 ) -> np.ndarray:
-    """Run a (specs x seeds x traces) grid through the fast engine.
+    """Run a (specs x seeds x traces) grid on the lockstep engine.
 
     ``specs``: [(scheme_name, params_dict), ...]
     ``traces``: (num_traces, rounds, n) reference delay profiles.
@@ -215,81 +353,88 @@ def simulate_batch(
     infeasible cells (bad params / wait-out contract violations) hold
     ``None`` instead of raising.
 
-    NOTE: ``seeds`` vary only the schemes' gradient-code coefficients,
-    which the load-only path never reads — today every seed yields a
-    bit-identical ``SimResult``, so Monte-Carlo variance must come
-    from ``traces``.  The axis exists for scheme variants whose
-    scheduling depends on the seed.
-
-    The per-round timing math for every unique (trace, load) pair runs
-    as one broadcast NumPy pass; only the inherently sequential gate /
-    scheduler state machine runs per cell, on the vectorized fast path.
+    Each spec advances all of its traces in lockstep
+    (:func:`simulate_lockstep`); ragged grids are fine — every spec
+    gets its own ``J``/``T`` (the App-J fit-the-trace rule) and state
+    shapes.  ``seeds`` vary only the schemes' gradient-code
+    coefficients, which the load-only path never reads: for schemes
+    with ``seed_sensitive = False`` (all paper schemes) the trace axis
+    runs ONCE and the resulting ``SimResult`` objects are broadcast
+    across the seed axis, so Monte-Carlo variance must come from
+    ``traces``.  Schemes registered without a lockstep kernel fall back
+    to per-cell ``simulate_fast`` runs.
     """
     traces = np.asarray(traces, dtype=np.float64)
     if traces.ndim == 2:
         traces = traces[None]
     num_traces, rounds_avail, n = traces.shape
 
-    # one prototype per spec: J and normalized_load depend only on the
-    # parameters, not on seed or trace
-    protos: list[Scheme | None] = []
-    for name, params in specs:
+    out = np.empty((len(specs), len(seeds), num_traces), dtype=object)
+    for si, (name, params) in enumerate(specs):
+        # one prototype per spec: J, T and normalized_load depend only
+        # on the parameters, not on seed or trace.  Probe at the trace
+        # length — an upper bound on any fitted J — so registered
+        # schemes that validate J accept it.
         try:
-            proto = make_scheme(name, n, _grid_J(name, params, J, rounds_avail),
-                                seed=seeds[0], **dict(params))
+            probe = make_scheme(name, n, rounds_avail, seed=seeds[0],
+                                **dict(params))
+            J_eff = _grid_J(rounds_avail, probe.T, J, f"{name} {params}")
         except ValueError:
             if strict:
                 raise
-            proto = None
-        protos.append(proto)
-
-    # one vectorized pass over unique (trace, extra) pairs
-    pair_index: dict[tuple[int, float], int] = {}
-    pairs: list[tuple[int, float]] = []
-    for proto in protos:
-        if proto is None:
+            out[si] = None
             continue
-        extra = (proto.normalized_load - 1.0 / n) * alpha
-        for ti in range(num_traces):
-            key = (ti, extra)
-            if key not in pair_index:
-                pair_index[key] = len(pairs)
-                pairs.append(key)
-    pres = _precompute_grid(traces, pairs, mu) if pairs else []
-
-    out = np.empty((len(specs), len(seeds), num_traces), dtype=object)
-    for si, proto in enumerate(protos):
-        name, params = specs[si]
-        for ki, seed in enumerate(seeds):
-            for ti in range(num_traces):
-                if proto is None:
-                    out[si, ki, ti] = None
-                    continue
-                # schemes are stateful: fresh instance per run
-                scheme = make_scheme(name, n, proto.J, seed=seed, **dict(params))
-                extra = (scheme.normalized_load - 1.0 / n) * alpha
-                pre = pres[pair_index[(ti, extra)]]
+        sensitive = (
+            getattr(probe, "seed_sensitive", False)
+            or kernel_seed_sensitive(probe.name)
+        )
+        run_seeds = seeds if sensitive else seeds[:1]
+        for ki, seed in enumerate(run_seeds):
+            if has_kernel(probe.name):
+                # contract violations already yield None cells under
+                # strict=False; ValueError covers constructors that
+                # reject the fitted J_eff (the probe ran at trace
+                # length, an upper bound)
                 try:
-                    out[si, ki, ti] = simulate_fast(
-                        scheme, traces[ti], mu=mu, alpha=alpha, J=proto.J,
-                        waitout=waitout, pre=pre,
+                    row = simulate_lockstep(
+                        name, params, traces, mu=mu, alpha=alpha, J=J_eff,
+                        waitout=waitout, seed=seed, strict=strict,
                     )
-                except AssertionError:
+                except ValueError:
                     if strict:
                         raise
-                    out[si, ki, ti] = None
+                    row = [None] * num_traces
+            else:
+                row = []
+                for ti in range(num_traces):
+                    try:
+                        scheme = make_scheme(name, n, J_eff, seed=seed,
+                                             **dict(params))
+                        row.append(simulate_fast(
+                            scheme, traces[ti], mu=mu, alpha=alpha,
+                            J=J_eff, waitout=waitout,
+                        ))
+                    except (ValueError, AssertionError):
+                        if strict:
+                            raise
+                        row.append(None)
+            out[si, ki] = row
+        if not sensitive:
+            # load-only results are seed-invariant: broadcast the
+            # SimResult objects (shared, treat as read-only)
+            for ki in range(1, len(seeds)):
+                out[si, ki] = out[si, 0]
     return out
 
 
-def _grid_J(name: str, params: dict, J: int | None, rounds_avail: int) -> int:
+def _grid_J(rounds_avail: int, maxT: int, J: int | None, what: str) -> int:
     """Legacy App.-J job-count rule: fit J + T inside the trace."""
-    maxT = params_delay(name, params)
     J_eff = J if J is not None else max(1, rounds_avail - maxT)
     if J_eff + maxT > rounds_avail:
         J_eff = rounds_avail - maxT
     if J_eff < 1:
         raise ValueError(
-            f"trace of {rounds_avail} rounds too short for {name} {params}"
+            f"trace of {rounds_avail} rounds too short for {what}"
         )
     return J_eff
 
@@ -305,53 +450,33 @@ def select_parameters_fast(
     J: int | None = None,
     seed: int = 0,
 ) -> Candidate:
-    """App.-J selection on the batch engine: replay the probe profile
-    under each candidate parameterization (load-adjusted) and pick the
-    fastest.  Chooses the exact same candidate as the legacy
+    """App.-J selection on the lockstep batch engine: replay the probe
+    profile under each candidate parameterization (load-adjusted) and
+    pick the fastest.  Chooses the exact same candidate as the legacy
     per-candidate loop (``simulator.select_parameters_legacy``) — same
     grid order, bit-identical per-job times — at a fraction of the cost.
     """
     alpha = alpha if alpha is not None else estimate_alpha(n)
-    T_probe = probe_delays.shape[0]
     if grid is None:
         grid = default_grid(name, n)
 
-    # feasible candidates, in grid order (selection is order-sensitive
-    # on ties: strict < keeps the earliest, like the legacy loop)
-    runs: list[tuple[dict, int, Scheme]] = []
-    for params in grid:
-        try:
-            J_eff = _grid_J(name, params, J, T_probe)
-            scheme = make_scheme(name, n, J_eff, seed=seed, **dict(params))
-        except ValueError:
-            continue
-        runs.append((params, J_eff, scheme))
-
-    # one broadcast precompute over the unique load-extras of the grid
-    traces = np.asarray(probe_delays, dtype=np.float64)[None]
-    pair_index: dict[tuple[int, float], int] = {}
-    pairs: list[tuple[int, float]] = []
-    for _, _, scheme in runs:
-        extra = (scheme.normalized_load - 1.0 / n) * alpha
-        if (0, extra) not in pair_index:
-            pair_index[(0, extra)] = len(pairs)
-            pairs.append((0, extra))
-    pres = _precompute_grid(traces, pairs, mu) if pairs else []
-
+    res = simulate_batch(
+        [(name, params) for params in grid],
+        np.asarray(probe_delays, dtype=np.float64)[None],
+        seeds=(seed,), mu=mu, alpha=alpha, J=J, strict=False,
+    )
+    # grid order is selection order: strict < keeps the earliest on
+    # ties, like the legacy loop
     best = Candidate(name, {})
-    for params, J_eff, scheme in runs:
-        extra = (scheme.normalized_load - 1.0 / n) * alpha
-        try:
-            res = simulate_fast(
-                scheme, probe_delays, mu=mu, alpha=alpha, J=J_eff,
-                pre=pres[pair_index[(0, extra)]],
-            )
-        except AssertionError:
+    for gi, params in enumerate(grid):
+        r = res[gi, 0, 0]
+        if r is None:
             continue
         # normalize to per-job time so different T don't skew comparison
-        per_job = res.total_time / J_eff
+        J_eff = len(r.job_done_round)
+        per_job = r.total_time / J_eff
         if per_job < best.est_time:
-            best = Candidate(name, params, scheme.normalized_load, per_job)
+            best = Candidate(name, params, r.normalized_load, per_job)
     if not best.params:
         raise RuntimeError(f"no feasible parameters for scheme {name}")
     return best

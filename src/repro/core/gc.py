@@ -163,6 +163,11 @@ class GradientCode:
         """Decodability from a bool[n] survivor mask (load-only fast path)."""
         return int(survivors.sum()) >= self.n - self.s
 
+    def can_decode_mask_batch(self, survivors: np.ndarray) -> np.ndarray:
+        """Batched ``can_decode_mask``: ``(..., n)`` bool -> ``(...,)``
+        bool (lockstep kernels, ``core.kernel``)."""
+        return survivors.sum(axis=-1) >= self.n - self.s
+
     @property
     def normalized_load(self) -> float:
         return (self.s + 1) / self.n
@@ -235,6 +240,14 @@ class RepGradientCode:
         return bool(
             survivors.reshape(self.num_groups, self.s + 1).any(axis=1).all()
         )
+
+    def can_decode_mask_batch(self, survivors: np.ndarray) -> np.ndarray:
+        """Batched ``can_decode_mask``: one survivor per replication
+        group, vectorized over any leading axes."""
+        shaped = survivors.reshape(
+            survivors.shape[:-1] + (self.num_groups, self.s + 1)
+        )
+        return shaped.any(axis=-1).all(axis=-1)
 
     @property
     def normalized_load(self) -> float:

@@ -1,0 +1,689 @@
+"""Functional scheme kernels: struct-of-arrays state, lockstep stepping.
+
+This is the redesigned simulation API that the batch engine runs on.
+Where the legacy ``Scheme`` classes in ``schemes.py`` are stateful OO
+schedulers advancing ONE run at a time, a :class:`SchemeKernel` is a
+pure round-transition function over a **struct-of-arrays state with a
+leading ``cells`` axis**: every independent grid cell (one (spec,
+trace) pair of a Monte-Carlo sweep) advances **in lockstep** through
+batched array ops, so the per-round Python overhead is paid once per
+*grid*, not once per *cell*.
+
+Protocol (see docs/scheme_kernels.md for the state layouts)::
+
+    kernel = make_kernel(scheme)             # from a legacy prototype
+    state  = kernel.init_state(cells)        # struct-of-arrays, (cells, ...)
+    loads  = kernel.round_loads(state, t)    # (cells,) normalized loads
+    state  = kernel.step(state, t, stragglers)   # stragglers: (cells, n)
+
+``step`` fuses the legacy ``assign`` + ``observe`` + ``collect``: it
+advances the master bookkeeping for round ``t`` and marks every job
+that became decodable this round in ``state.done_round`` (and cells
+that violated the wait-out contract in ``state.dead``).  The legacy
+``Scheme`` classes remain as single-cell wrappers over these kernels
+(``Scheme.step`` / ``Scheme.collect_jobs``) while their descriptor path
+(``assign``/``observe``/``collect``) stays fully independent — that is
+the bit-for-bit oracle the differential tests run against.
+
+All math goes through the thin backend shim (``core.backend``): numpy
+today, ``jax.numpy``-swappable, mirroring the ``kernels/*/ref.py`` vs
+``ops.py`` split, so the hot loop is one ``jit`` away from device
+residency.
+
+:class:`GateKernel` gives the Remark-2.3 wait-out gate
+(``straggler.ConformanceGate``) the same treatment: per-member rolling
+suffix windows and alive flags carry a leading cells axis, and
+admission is one ``suffix_ok_batch`` array check per member per round.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from .backend import Backend, get_backend
+from .straggler import MixtureModel, StragglerModel, WindowwiseOr
+
+__all__ = [
+    "SchemeState",
+    "SchemeKernel",
+    "GCKernel",
+    "SRSGCKernel",
+    "MSGCKernel",
+    "UncodedKernel",
+    "GateState",
+    "GateKernel",
+    "make_kernel",
+    "register_kernel",
+    "has_kernel",
+    "kernel_seed_sensitive",
+]
+
+
+# ---------------------------------------------------------------------------
+# states
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class SchemeState:
+    """Base struct-of-arrays state; every array has a leading cells axis.
+
+    ``done_round[c, j]`` is the round job-j of cell-c became decodable
+    (0 = pending; column 0 unused so jobs index 1-based, like the
+    paper).  ``dead[c]`` marks cells whose wait-out contract was
+    violated (a job missed its round-(t+T) deadline) — their results
+    are invalid and the engine either raises (strict) or yields None.
+    """
+
+    done_round: np.ndarray  # (cells, J+1) int64
+    dead: np.ndarray        # (cells,) bool
+
+    @property
+    def cells(self) -> int:
+        return self.dead.shape[0]
+
+
+@dataclass
+class GCState(SchemeState):
+    pass
+
+
+@dataclass
+class SRSGCState(SchemeState):
+    """Ring buffers over ``B + 1`` slots indexed by ``key % (B+1)``:
+    job-keyed for ``returned``/``n_fresh``, round-keyed for
+    ``assigned`` (a job/round key is live for <= B+1 rounds)."""
+
+    returned: np.ndarray  # (cells, B+1, n) bool  l_i(job) returned
+    assigned: np.ndarray  # (cells, B+1, n) int64 per-worker job of round
+    n_fresh: np.ndarray   # (cells, B+1) int64    paper's N(job)
+
+
+@dataclass
+class MSGCState(SchemeState):
+    """Job-keyed ring buffers over ``slots = W-1+B = T+1`` entries.
+
+    There is no explicit completed-D1 array: chunk (w, j) of a job is
+    done iff its first attempt happened (round ``job + j``) and it is
+    not in the failed-chunk queue — failures enqueue in ``pend`` at the
+    first attempt and leave it only on a successful retry — so D1
+    completeness is ``t >= job + W - 2  and  not pend.any()``.
+    """
+
+    pend: np.ndarray      # (cells, slots, n, W-1) bool failed-D1 queue
+    d2: np.ndarray | None  # (cells, slots, B, n) bool; None when lam == n
+
+
+@dataclass
+class UncodedState(SchemeState):
+    pass
+
+
+# ---------------------------------------------------------------------------
+# kernels
+# ---------------------------------------------------------------------------
+
+
+class SchemeKernel:
+    """Pure functional round scheduler over a cells axis.
+
+    Subclasses read all static parameters off a legacy ``Scheme``
+    prototype at construction (reusing its validation) and implement
+    ``init_state`` / ``step``.  ``seed_sensitive`` declares whether the
+    load-only stepping depends on the gradient-code seed — the batch
+    engine deduplicates the seed axis when it is False (true for every
+    scheme in the paper: coefficients never enter the timing math).
+    """
+
+    name: str = "base"
+    seed_sensitive: bool = False
+    n: int
+    J: int
+    T: int
+    normalized_load: float
+
+    def __init__(self, scheme, backend: Backend | None = None):
+        self.bk = backend or get_backend()
+        self.n = scheme.n
+        self.J = scheme.J
+        self.T = scheme.T
+        self.normalized_load = scheme.normalized_load
+        self.design_model = scheme.design_model
+
+    def init_state(self, cells: int) -> SchemeState:
+        raise NotImplementedError
+
+    def step(self, state: SchemeState, t: int, stragglers) -> SchemeState:
+        """Fused assign+observe+collect for round ``t``.
+
+        ``stragglers``: (cells, n) bool, already gate-admitted.  Returns
+        the advanced state (the numpy backend updates in place and
+        returns the same object; treat the input as consumed).
+        """
+        raise NotImplementedError
+
+    def round_loads(self, state: SchemeState, t: int):
+        """(cells,) per-worker normalized load in round ``t``.
+
+        Constant for every paper scheme; per-cell so load-adaptive
+        variants can vary it without touching the engine.
+        """
+        return self.bk.xp.full(state.cells, self.normalized_load)
+
+    def _base_arrays(self, cells: int) -> dict:
+        xp = self.bk.xp
+        return dict(
+            done_round=xp.zeros((cells, self.J + 1), dtype=xp.int64),
+            dead=xp.zeros(cells, dtype=bool),
+        )
+
+    def _pending(self, state, job: int):
+        """Cells still waiting on ``job`` (None when there are none —
+        lets kernels skip the decodability math for settled jobs)."""
+        pending = (state.done_round[:, job] == 0) & ~state.dead
+        return pending if bool(pending.any()) else None
+
+    def _mark_done(self, state, job: int, pending, can, t: int,
+                   *, deadline: bool):
+        """Record newly decodable cells for ``job``; kill cells that
+        missed the deadline when ``deadline`` is set."""
+        bk = self.bk
+        state.done_round = bk.at_set(
+            state.done_round, (pending & can, job), t
+        )
+        if deadline:
+            state.dead = state.dead | (pending & ~can)
+        return state
+
+
+class GCKernel(SchemeKernel):
+    """Round-wise (n, s)-GC (paper §3.1): job-t decodes from round-t
+    survivors or never (T = 0)."""
+
+    name = "gc"
+
+    def __init__(self, scheme, backend: Backend | None = None):
+        super().__init__(scheme, backend)
+        self.code = scheme.code
+
+    def init_state(self, cells: int) -> GCState:
+        return GCState(**self._base_arrays(cells))
+
+    def step(self, state: GCState, t: int, stragglers) -> GCState:
+        if not 1 <= t <= self.J:
+            return state
+        pending = self._pending(state, t)
+        if pending is None:
+            return state
+        can = self.code.can_decode_mask_batch(~stragglers)
+        return self._mark_done(state, t, pending, can, t, deadline=True)
+
+
+class SRSGCKernel(SchemeKernel):
+    """SR-SGC (§3.2, Algorithm 1) with the App.-G Rep refinement
+    (Algorithm 3) when the code is a ``RepGradientCode``."""
+
+    name = "sr-sgc"
+
+    def __init__(self, scheme, backend: Backend | None = None):
+        super().__init__(scheme, backend)
+        self.B, self.s = scheme.B, scheme.s
+        self.code = scheme.code
+        self.rep = scheme._groups is not None
+        self.num_groups = scheme.code.num_groups if self.rep else 0
+
+    def init_state(self, cells: int) -> SRSGCState:
+        xp = self.bk.xp
+        R = self.B + 1
+        return SRSGCState(
+            returned=xp.zeros((cells, R, self.n), dtype=bool),
+            assigned=xp.zeros((cells, R, self.n), dtype=xp.int64),
+            n_fresh=xp.zeros((cells, R), dtype=xp.int64),
+            **self._base_arrays(cells),
+        )
+
+    def step(self, state: SRSGCState, t: int, stragglers) -> SRSGCState:
+        bk, xp = self.bk, self.bk.xp
+        n, B, J = self.n, self.B, self.J
+        R = B + 1
+        cells = state.cells
+        tb = t - B
+        if 1 <= t <= J:
+            # job-t enters: reclaim its ring slot (held job t-R, whose
+            # deadline round t-1 has passed)
+            state.returned = bk.at_set(
+                state.returned, (slice(None), t % R), False
+            )
+            state.n_fresh = bk.at_set(state.n_fresh, (slice(None), t % R), 0)
+        # Algorithm 1 retry rule, vectorized over cells
+        jobs = xp.full((cells, n), t, dtype=xp.int64)
+        if 1 <= tb <= J:
+            sl_b = tb % R
+            prev = state.assigned[:, sl_b]
+            prev_ret = state.returned[:, sl_b]
+            eligible = ~((prev == tb) & prev_ret)
+            if self.rep:
+                # Algorithm 3: skip workers whose replication group's
+                # result is already in (groups are worker-contiguous)
+                g = self.s + 1
+                covered = prev_ret.reshape(cells, self.num_groups, g).any(
+                    axis=2
+                )
+                eligible = eligible & ~xp.repeat(covered, g, axis=1)
+            # retries fill eligible workers in worker order until the
+            # returned-or-retrying total reaches n - s
+            budget = (n - self.s) - state.n_fresh[:, sl_b]
+            csum = xp.cumsum(eligible, axis=1)
+            retry = eligible & (csum - eligible < budget[:, None])
+            jobs = xp.where(retry, tb, jobs)
+        state.assigned = bk.at_set(state.assigned, (slice(None), t % R), jobs)
+        # observe
+        ok = ~stragglers
+        for job in (t, tb):
+            if not 1 <= job <= J:
+                continue
+            mask = ok & (jobs == job)
+            if job == t:
+                state.n_fresh = bk.at_set(
+                    state.n_fresh, (slice(None), job % R), mask.sum(axis=1)
+                )
+            state.returned = bk.at_or(
+                state.returned, (slice(None), job % R), mask
+            )
+        # collect; job t-B hits its Prop-3.1 deadline this round
+        for job in (t, tb):
+            if not 1 <= job <= J:
+                continue
+            pending = self._pending(state, job)
+            if pending is None:
+                continue
+            can = self.code.can_decode_mask_batch(state.returned[:, job % R])
+            state = self._mark_done(state, job, pending, can, t,
+                                    deadline=job == tb)
+        return state
+
+
+class MSGCKernel(SchemeKernel):
+    """M-SGC (§3.3, Algorithm 2): diagonally interleaved D1/D2 slots.
+
+    The per-job bool masks of the legacy scheduler (``pend``/``d1``
+    ``[n, W-1]``, ``d2`` ``[B, n]``) become job-keyed ring buffers with
+    a cells axis; the slot loop stays a Python loop over the ``slots``
+    diagonal offsets (a per-*spec* cost), with every slot update one
+    batched array op over all cells.
+    """
+
+    name = "m-sgc"
+
+    def __init__(self, scheme, backend: Backend | None = None):
+        super().__init__(scheme, backend)
+        self.B, self.W, self.lam = scheme.B, scheme.W, scheme.lam
+        self.slots = scheme.slots  # == T + 1: ring size
+        self.has_d2 = scheme.lam < scheme.n
+
+    def init_state(self, cells: int) -> MSGCState:
+        xp = self.bk.xp
+        R, n, W = self.slots, self.n, self.W
+        return MSGCState(
+            pend=xp.zeros((cells, R, n, W - 1), dtype=bool),
+            d2=(
+                xp.zeros((cells, R, self.B, n), dtype=bool)
+                if self.has_d2
+                else None
+            ),
+            **self._base_arrays(cells),
+        )
+
+    def step(self, state: MSGCState, t: int, stragglers) -> MSGCState:
+        bk, xp = self.bk, self.bk.xp
+        W, J, R = self.W, self.J, self.slots
+        ok = ~stragglers
+        if 1 <= t <= J:
+            # job-t enters: reclaim its ring slot (job t-R's deadline
+            # was round t-1)
+            sl = t % R
+            state.pend = bk.at_set(state.pend, (slice(None), sl), False)
+            if self.has_d2:
+                state.d2 = bk.at_set(state.d2, (slice(None), sl), False)
+        for j in range(self.slots):
+            job = t - j
+            if not 1 <= job <= J:
+                continue
+            sl = job % R
+            if j <= W - 2:
+                # first attempt of D1 local chunk j: failures enqueue
+                state.pend = bk.at_or(
+                    state.pend, (slice(None), sl, slice(None), j), stragglers
+                )
+            else:
+                # retry the queue head (first pending local chunk) if
+                # any, else the group-(j-W+1) coded D2 task
+                pend_j = state.pend[:, sl]
+                has = pend_j.any(axis=2)
+                retry_ok = has & ok
+                if bool(retry_ok.any()):
+                    ci, wi = xp.nonzero(retry_ok)
+                    hd = pend_j.argmax(axis=2)[ci, wi]
+                    state.pend = bk.at_set(
+                        state.pend, (ci, sl, wi, hd), False
+                    )
+                if self.has_d2:
+                    state.d2 = bk.at_or(
+                        state.d2, (slice(None), sl, j - (W - 1)), ~has & ok
+                    )
+        # collect every in-flight job; job t-T hits its Prop-3.2 deadline
+        for job in range(max(1, t - self.T), min(t, J) + 1):
+            pending = self._pending(state, job)
+            if pending is None:
+                continue
+            sl = job % R
+            # D1 complete once all first attempts ran and no failures
+            # remain queued; D2 needs n - lam returns in every group
+            if t - job >= W - 2:
+                can = ~state.pend[:, sl].any(axis=(1, 2))
+                if self.has_d2:
+                    can = can & (
+                        state.d2[:, sl].sum(axis=2) >= self.n - self.lam
+                    ).all(axis=1)
+            else:
+                can = xp.zeros(state.cells, dtype=bool)
+            state = self._mark_done(
+                state, job, pending, can, t, deadline=job == t - self.T
+            )
+        return state
+
+
+class UncodedKernel(SchemeKernel):
+    """Uncoded baseline: tolerates no stragglers (the gate waits every
+    candidate out, so admitted straggler sets are empty)."""
+
+    name = "uncoded"
+
+    def init_state(self, cells: int) -> UncodedState:
+        return UncodedState(**self._base_arrays(cells))
+
+    def step(self, state: UncodedState, t: int, stragglers) -> UncodedState:
+        if not 1 <= t <= self.J:
+            return state
+        pending = self._pending(state, t)
+        if pending is None:
+            return state
+        can = ~stragglers.any(axis=1)
+        return self._mark_done(state, t, pending, can, t, deadline=True)
+
+
+# ---------------------------------------------------------------------------
+# batched wait-out gate
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class GateState:
+    """Batched ``ConformanceGate`` state.
+
+    ``bufs[i]``: member-i's rolling suffix window, (cells, w_i - 1, n);
+    ``filled`` is a plain int because lockstep commits one row per
+    round for every cell; ``alive``: (cells, members) — a member that
+    fails once in a cell is dead there forever.  ``history`` collects
+    the committed rows ((cells, n) each) for ``effective_pattern``.
+    """
+
+    bufs: list
+    alive: np.ndarray  # (cells, members) bool
+    filled: int = 0
+    history: list = field(default_factory=list)
+
+
+class GateKernel:
+    """Remark-2.3 wait-out gate over a cells axis (see
+    ``straggler.ConformanceGate`` for the single-run semantics it
+    reproduces round-for-round)."""
+
+    def __init__(self, model: StragglerModel, n: int,
+                 backend: Backend | None = None):
+        self.bk = backend or get_backend()
+        self.members = (
+            list(model.members) if isinstance(model, MixtureModel) else [model]
+        )
+        self.windows = [m.window for m in self.members]
+        self.n = n
+        # count-based members ignore all-clear worker columns, so the
+        # admission math can run on just the active columns
+        self.reducible = all(m.column_reducible for m in self.members)
+        # every paper model has a closed-form minimal-drop solver; the
+        # gate falls back to checking drop-count variants otherwise
+        self.analytic = all(self._has_solver(m) for m in self.members)
+
+    @staticmethod
+    def _has_solver(m) -> bool:
+        if isinstance(m, WindowwiseOr):
+            return all(x.min_drops_batch is not None for x in m.members)
+        return m.min_drops_batch is not None
+
+    def init_state(self, cells: int) -> GateState:
+        xp = self.bk.xp
+        return GateState(
+            bufs=[
+                xp.zeros((cells, w - 1, self.n), dtype=bool)
+                for w in self.windows
+            ],
+            alive=xp.ones((cells, len(self.members)), dtype=bool),
+        )
+
+    def _member_ok(self, bufs, alive, cand, filled):
+        """(rows, members): which still-alive members admit ``cand`` as
+        each row's next committed round (``bufs``/``alive``/``cand``
+        may be a row-subset of the full grid)."""
+        xp = self.bk.xp
+        cols = []
+        for i, (m, w) in enumerate(zip(self.members, self.windows)):
+            k = min(filled, w - 1)
+            if k:
+                win = xp.concatenate(
+                    [bufs[i][:, w - 1 - k :], cand[:, None]], axis=1
+                )
+            else:
+                win = cand[:, None]
+            cols.append(alive[:, i] & m.suffix_ok_batch(win))
+        return xp.stack(cols, axis=1)
+
+    def _commit(self, gs: GateState, row) -> None:
+        xp = self.bk.xp
+        for i, w in enumerate(self.windows):
+            if w > 1:
+                gs.bufs[i] = xp.concatenate(
+                    [gs.bufs[i][:, 1:], row[:, None]], axis=1
+                )
+        gs.filled = min(gs.filled + 1, max(self.windows))
+        gs.history.append(xp.array(row))
+
+    def admit_partial(self, gs: GateState, candidate, cost, any_cand):
+        """Batched selective wait-out (Remark 2.3, refined).
+
+        Per cell: greedily wait out (drop) the cheapest violating
+        workers until the remainder is admissible — identical to
+        ``ConformanceGate.admit_partial`` per cell, but each greedy
+        iteration drops one worker from EVERY unresolved cell at once.
+        ``any_cand`` masks cells whose candidate set was empty to begin
+        with (their alive flags stay untouched, like ``force``).
+
+        Returns ``(gs, effective (cells, n), waited (cells, n))``;
+        commits one row for every cell.
+
+        The greedy drop ORDER is fully determined (ascending cost,
+        first-index on ties — exactly repeated ``argmin`` over the
+        remainder), so instead of looping drop-by-drop the rejected
+        rows expand every "k cheapest dropped" variant along a new axis
+        and one batched member check finds each row's minimal
+        admissible k.  Identical outcome to the scalar gate's loop,
+        paid as O(1) member checks per round.
+        """
+        bk, xp = self.bk, self.bk.xp
+        n = self.n
+        cand = xp.array(candidate)
+        waited = xp.zeros_like(cand)
+        # count-based members only see straggler occurrences: restrict
+        # the admission math to the active worker columns
+        if self.reducible:
+            act = cand.any(axis=0)
+            if gs.filled:
+                for i, w in enumerate(self.windows):
+                    if w > 1:
+                        act = act | gs.bufs[i].any(axis=(0, 1))
+            csel = xp.nonzero(act)[0]
+            bufs = [b[:, :, csel] for b in gs.bufs]
+            ccand = cand[:, csel]
+        else:
+            csel = None
+            bufs, ccand = gs.bufs, cand
+        mok = self._member_ok(bufs, gs.alive, ccand, gs.filled)
+        resolved = mok.any(axis=1)
+        final_ok = mok
+        idx = xp.nonzero(~resolved & cand.any(axis=1))[0]
+        if idx.size:
+            a_cand = cand[idx]
+            a_alive = gs.alive[idx]
+            rows = idx.size
+            count = a_cand.sum(axis=1)
+            # rank candidates by drop order; non-candidates sort last
+            # (stable ascending cost == the scalar gate's repeated
+            # argmin over the remaining candidates)
+            order = xp.argsort(
+                xp.where(a_cand, cost[idx], xp.inf), axis=1, kind="stable"
+            )
+            rank = xp.empty_like(order)
+            rank = bk.at_set(
+                rank,
+                (xp.arange(rows)[:, None], order),
+                xp.arange(n)[None, :],
+            )
+            if self.analytic:
+                # closed form: each member reports its minimal
+                # admissible drop count; the cell resolves at the
+                # smallest over alive members
+                sent = n + 1
+                kms = []
+                for i, (m, w) in enumerate(zip(self.members, self.windows)):
+                    kh = min(gs.filled, w - 1)
+                    buf = gs.bufs[i][idx][:, w - 1 - kh :]
+                    km = m.min_drops_batch(buf, a_cand, rank, order)
+                    kms.append(xp.where(a_alive[:, i], km, sent))
+                km_arr = xp.stack(kms, axis=1)      # (rows, members)
+                kstar = km_arr.min(axis=1)
+                # the scalar loop only CHECKS while candidates remain:
+                # k in [0, count-1]; an emptied-out row (kstar = count)
+                # commits without a check, leaving alive untouched
+                has = kstar < count
+                kstar = xp.where(has, kstar, count)
+                sel = km_arr <= kstar[:, None]
+            else:
+                # fallback for externally registered models: expand
+                # every "k cheapest dropped" variant and check them all
+                K = int(count.max())
+                ks = xp.arange(1, K + 1)
+                variants = a_cand[:, None, :] & (
+                    rank[:, None, :] >= ks[None, :, None]
+                )
+                flat = variants.reshape(rows * K, n)
+                cols = []
+                for i, (m, w) in enumerate(zip(self.members, self.windows)):
+                    kh = min(gs.filled, w - 1)
+                    if kh:
+                        buf = gs.bufs[i][idx][:, w - 1 - kh :]
+                        bufx = xp.broadcast_to(
+                            buf[:, None], (rows, K) + buf.shape[1:]
+                        ).reshape((rows * K,) + buf.shape[1:])
+                        win = xp.concatenate([bufx, flat[:, None]], axis=1)
+                    else:
+                        win = flat[:, None]
+                    ok_k = m.suffix_ok_batch(win).reshape(rows, K)
+                    cols.append(a_alive[:, i, None] & ok_k)
+                mok_k = xp.stack(cols, axis=2)      # (rows, K, members)
+                valid = mok_k.any(axis=2) & (ks[None, :] < count[:, None])
+                has = valid.any(axis=1)
+                kstar = xp.where(has, valid.argmax(axis=1) + 1, count)
+                sel = mok_k[xp.arange(rows), kstar - 1]
+            cand = bk.at_set(cand, (idx,), a_cand & (rank >= kstar[:, None]))
+            waited = bk.at_set(
+                waited, (idx,), a_cand & (rank < kstar[:, None])
+            )
+            resolved = bk.at_set(resolved, (idx,), has)
+            final_ok = bk.at_set(
+                final_ok, (idx,), xp.where(has[:, None], sel, final_ok[idx])
+            )
+        # alive narrows only where a non-empty candidate was admitted;
+        # emptied-out cells commit without touching alive (== force)
+        upd = resolved & any_cand
+        gs.alive = xp.where(upd[:, None], final_ok, gs.alive)
+        self._commit(gs, cand)
+        return gs, cand, waited
+
+    def admit_all(self, gs: GateState, candidate, any_cand):
+        """Batched App-J all-or-nothing admission: per cell, admit the
+        whole candidate set or wait out every worker (commit zeros).
+
+        Returns ``(gs, effective (cells, n), admitted (cells,))``.
+        """
+        xp = self.bk.xp
+        mok = self._member_ok(gs.bufs, gs.alive, candidate, gs.filled)
+        ok_any = mok.any(axis=1)
+        eff = candidate & ok_any[:, None]
+        upd = ok_any & any_cand
+        gs.alive = xp.where(upd[:, None], mok, gs.alive)
+        self._commit(gs, eff)
+        return gs, eff, ok_any
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+_KERNELS: dict[str, type] = {
+    "gc": GCKernel,
+    "sr-sgc": SRSGCKernel,
+    "m-sgc": MSGCKernel,
+    "uncoded": UncodedKernel,
+}
+
+
+def _norm(name: str) -> str:
+    """The scheme registry's canonical key, so a kernel registered
+    under 'DC_GC' still matches ``Scheme.name == 'dc-gc'``."""
+    from .schemes import normalize_scheme_name
+
+    return normalize_scheme_name(name)
+
+
+def register_kernel(scheme_name: str, kernel_cls: type) -> None:
+    """Register a kernel for ``Scheme.name == scheme_name`` (the hook
+    new scheme reproductions use; see docs/scheme_kernels.md)."""
+    _KERNELS[_norm(scheme_name)] = kernel_cls
+
+
+def has_kernel(scheme_name: str) -> bool:
+    return _norm(scheme_name) in _KERNELS
+
+
+def kernel_seed_sensitive(scheme_name: str) -> bool:
+    """Whether the registered kernel declares seed-sensitive stepping
+    (the batch engine fans the seed axis out if EITHER the scheme or
+    its kernel does)."""
+    cls = _KERNELS.get(_norm(scheme_name))
+    return bool(getattr(cls, "seed_sensitive", False))
+
+
+def make_kernel(scheme, backend: Backend | None = None) -> SchemeKernel:
+    """Build the lockstep kernel for a legacy ``Scheme`` prototype.
+
+    The prototype supplies all validated static parameters (and the
+    gradient code object, whose encode matrix is never built — kernels
+    only use capacity/coverage checks)."""
+    try:
+        cls = _KERNELS[_norm(scheme.name)]
+    except KeyError:
+        raise KeyError(
+            f"no lockstep kernel registered for scheme {scheme.name!r}"
+        ) from None
+    return cls(scheme, backend)

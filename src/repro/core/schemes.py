@@ -16,12 +16,23 @@ simulator only consumes the per-round load.  For simulation there is a
     scheme.step(t, straggler_mask)           # assign + observe, fused
     done = scheme.collect_jobs(t)            # [(job, round_done)], no decode
 
-``step``/``collect_jobs`` advance exactly the same master state as
-``assign``/``observe``/``collect`` (differentially tested in
-``tests/test_batch_engine.py``) but use vectorized bookkeeping and skip
-the decode-weight solve — the simulator only needs decodability, not
-the beta vectors.  Use one protocol or the other for a given run; do
+``step``/``collect_jobs`` are thin single-cell wrappers over the
+functional lockstep kernels (``core.kernel``): ``step`` advances a
+1-cell ``SchemeState`` through the batched kernel and ``collect_jobs``
+reads newly decodable jobs off it, skipping the decode-weight solve —
+the simulator only needs decodability, not the beta vectors.  The
+descriptor path above stays fully independent of the kernels, which
+makes it the bit-for-bit oracle the differential tests
+(``tests/test_batch_engine.py``, ``tests/test_lockstep.py``) run the
+kernels against.  Use one protocol or the other for a given run; do
 not interleave them round-by-round.
+
+Schemes registered via :func:`register_scheme` without a matching
+kernel (``core.kernel.register_kernel``) keep working: ``step``/
+``collect_jobs`` fall back to the descriptor path.  ``seed_sensitive``
+declares whether load-only stepping depends on the coefficient seed
+(False for every paper scheme); the batch engine deduplicates the seed
+axis when it is False.
 
 The wait-out rule of Remark 2.3 lives *outside* the scheme (see
 ``simulator.py`` / ``train/driver.py``): the caller must only feed
@@ -63,6 +74,7 @@ __all__ = [
     "MSGCScheme",
     "NoCodingScheme",
     "make_scheme",
+    "register_scheme",
 ]
 
 
@@ -98,6 +110,9 @@ class JobDecode:
 
 class Scheme:
     name: str = "base"
+    #: True when the load-only stepping depends on the coefficient seed
+    #: (no paper scheme does; the batch engine dedups the seed axis).
+    seed_sensitive: bool = False
     n: int
     T: int
     design_model: MixtureModel
@@ -112,20 +127,51 @@ class Scheme:
     def collect(self, t: int) -> list[JobDecode]:
         raise NotImplementedError
 
-    # -- load-only fast path (simulation) -------------------------------
-    def step(self, t: int, stragglers: np.ndarray) -> None:
-        """Fused assign + observe without materializing MiniTasks.
+    # -- load-only fast path: single-cell kernel wrappers ---------------
+    def _kernel(self):
+        """Lazily build the 1-cell lockstep kernel state (None when no
+        kernel is registered for this scheme: descriptor fallback)."""
+        kern = getattr(self, "_kern", None)
+        if kern is None and not getattr(self, "_kern_missing", False):
+            from .kernel import make_kernel
 
-        Subclasses override this with vectorized state updates; the
-        default falls back to the descriptor path.
-        """
-        self.assign(t)
-        self.observe(t, stragglers)
+            try:
+                kern = self._kern = make_kernel(self)
+            except KeyError:
+                self._kern_missing = True
+                return None
+            self._kstate = kern.init_state(1)
+        return kern
+
+    def step(self, t: int, stragglers: np.ndarray) -> None:
+        """Fused assign + observe + decodability bookkeeping without
+        materializing MiniTasks (one ``SchemeKernel.step`` on a 1-cell
+        state; descriptor-path fallback for kernel-less schemes)."""
+        kern = self._kernel()
+        if kern is None:
+            self.assign(t)
+            self.observe(t, stragglers)
+            return
+        strag = np.asarray(stragglers, dtype=bool).reshape(1, -1)
+        self._kstate = kern.step(self._kstate, t, strag)
 
     def collect_jobs(self, t: int) -> list[tuple[int, int]]:
         """Sim-only collect: ``[(job, round_done)]`` skipping the
         decode-weight solve (only decodability is checked)."""
-        return [(jd.job, jd.round_done) for jd in self.collect(t)]
+        kern = self._kernel()
+        if kern is None:
+            return [(jd.job, jd.round_done) for jd in self.collect(t)]
+        st = self._kstate
+        if bool(st.dead[0]):
+            raise AssertionError(
+                f"{self.name}: job missed its deadline by round {t}; "
+                "caller violated the wait-out contract"
+            )
+        return [
+            (job, t)
+            for job in range(max(1, t - self.T), min(t, self.J) + 1)
+            if int(st.done_round[0, job]) == t
+        ]
 
     def round_load(self, t: int) -> float:
         """Per-worker normalized load in round-t (constant for all schemes)."""
@@ -165,14 +211,13 @@ class GCScheme(Scheme):
         if 1 <= t <= self.J:
             self._returned[t] = ~stragglers
 
-    def step(self, t: int, stragglers: np.ndarray) -> None:
-        self.observe(t, stragglers)  # assign has no side effects
-
     def _survivors(self, t: int) -> np.ndarray:
         surv = self._returned.get(t)
         return surv if surv is not None else np.zeros(self.n, dtype=bool)
 
-    def collect_jobs(self, t: int) -> list[tuple[int, int]]:
+    def _collect_jobs_oracle(self, t: int) -> list[tuple[int, int]]:
+        """Descriptor-path decodability check (independent of the
+        lockstep kernels; differential-testing oracle)."""
         if t in self._done or not 1 <= t <= self.J:
             return []
         surv = self._survivors(t)
@@ -185,7 +230,7 @@ class GCScheme(Scheme):
         return [(t, t)]
 
     def collect(self, t: int) -> list[JobDecode]:
-        jobs = self.collect_jobs(t)
+        jobs = self._collect_jobs_oracle(t)
         out = []
         for job, done_round in jobs:
             surv = np.flatnonzero(self._survivors(job))
@@ -301,12 +346,7 @@ class SRSGCScheme(Scheme):
     def observe(self, t: int, stragglers: np.ndarray) -> None:
         self._observe_jobs(t, self._assigned[t], stragglers)
 
-    def step(self, t: int, stragglers: np.ndarray) -> None:
-        jobs = self._compute_jobs(t)
-        self._assigned[t] = jobs
-        self._observe_jobs(t, jobs, stragglers)
-
-    def collect_jobs(self, t: int) -> list[tuple[int, int]]:
+    def _collect_jobs_oracle(self, t: int) -> list[tuple[int, int]]:
         out = []
         for job in (t, t - self.B):
             if not 1 <= job <= self.J or job in self._done:
@@ -324,7 +364,7 @@ class SRSGCScheme(Scheme):
 
     def collect(self, t: int) -> list[JobDecode]:
         out = []
-        for job, done_round in self.collect_jobs(t):
+        for job, done_round in self._collect_jobs_oracle(t):
             surv = np.flatnonzero(self._returned[job])
             beta = self.code.decode_vector(surv)
             out.append(
@@ -477,27 +517,6 @@ class MSGCScheme(Scheme):
                     _, _, d2 = self._job_state(mt.job)
                     d2[mt.chunk, i] = True
 
-    def step(self, t: int, stragglers: np.ndarray) -> None:
-        ok = ~stragglers
-        for j in range(self.slots):
-            job = t - j
-            if not 1 <= job <= self.J:
-                continue
-            d1, pend, d2 = self._job_state(job)
-            if j <= self.W - 2:
-                d1[:, j] |= ok
-                pend[:, j] |= stragglers
-            else:
-                has = pend.any(axis=1)
-                retry_ok = has & ok
-                if retry_ok.any():
-                    w = np.flatnonzero(retry_ok)
-                    head = pend[w].argmax(axis=1)
-                    d1[w, head] = True
-                    pend[w, head] = False
-                if self.lam < self.n:
-                    d2[j - (self.W - 1)] |= ~has & ok
-
     def _decodable(self, job: int) -> tuple[bool, bool]:
         d1, d2 = self._d1_done[job], self._d2_returned[job]
         d1_ok = bool(d1.all())
@@ -506,7 +525,7 @@ class MSGCScheme(Scheme):
         )
         return d1_ok, d2_ok
 
-    def collect_jobs(self, t: int) -> list[tuple[int, int]]:
+    def _collect_jobs_oracle(self, t: int) -> list[tuple[int, int]]:
         out = []
         lo = max(1, t - self.T)
         for job in range(lo, min(t, self.J) + 1):
@@ -526,7 +545,7 @@ class MSGCScheme(Scheme):
 
     def collect(self, t: int) -> list[JobDecode]:
         out = []
-        for job, done_round in self.collect_jobs(t):
+        for job, done_round in self._collect_jobs_oracle(t):
             gw = {}
             if self.lam < self.n:
                 d2 = self._d2_returned[job]
@@ -574,10 +593,7 @@ class NoCodingScheme(Scheme):
                 raise AssertionError("uncoded scheme tolerates no stragglers")
             self._returned[t] = set(range(self.n))
 
-    def step(self, t: int, stragglers: np.ndarray) -> None:
-        self.observe(t, stragglers)  # assign has no side effects
-
-    def collect_jobs(self, t: int) -> list[tuple[int, int]]:
+    def _collect_jobs_oracle(self, t: int) -> list[tuple[int, int]]:
         if t in self._done or not 1 <= t <= self.J:
             return []
         self._done.add(t)
@@ -586,12 +602,34 @@ class NoCodingScheme(Scheme):
     def collect(self, t: int) -> list[JobDecode]:
         return [
             JobDecode(job=job, round_done=r, d1_workers=list(range(self.n)))
-            for job, r in self.collect_jobs(t)
+            for job, r in self._collect_jobs_oracle(t)
         ]
 
 
+#: user-registered scheme factories: name -> factory(n, J, **kw)
+_SCHEME_FACTORIES: dict = {}
+
+
+def normalize_scheme_name(name: str) -> str:
+    """Canonical registry key for a scheme name — shared by the scheme
+    factory registry here and the kernel registry (``core.kernel``),
+    so a scheme and its kernel can never drift apart on casing or
+    underscore/dash spelling."""
+    return name.lower().replace("_", "-")
+
+
+def register_scheme(name: str, factory) -> None:
+    """Register a scheme factory under ``name`` for :func:`make_scheme`
+    (the hook new scheme reproductions use; pair it with
+    ``core.kernel.register_kernel`` for lockstep support — without a
+    kernel the batch engine falls back to per-cell stepping)."""
+    _SCHEME_FACTORIES[normalize_scheme_name(name)] = factory
+
+
 def make_scheme(name: str, n: int, J: int, **kw) -> Scheme:
-    name = name.lower().replace("_", "-")
+    name = normalize_scheme_name(name)
+    if name in _SCHEME_FACTORIES:
+        return _SCHEME_FACTORIES[name](n, J, **kw)
     if name == "gc":
         return GCScheme(n, kw.pop("s"), J, **kw)
     if name == "sr-sgc":

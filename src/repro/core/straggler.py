@@ -74,8 +74,64 @@ def _window_sum(pat: np.ndarray, W: int) -> np.ndarray:
     return cs[W:] - cs[:-W]
 
 
+def _spatial_min_drops(
+    buf: np.ndarray, cand: np.ndarray, order: np.ndarray, lam: int
+) -> np.ndarray:
+    """Minimal k (dropping the k first candidates in ``order``) that
+    brings the window's distinct-straggler count to <= ``lam``.
+
+    Dropping a candidate removes a distinct straggler iff the worker is
+    inactive in the committed ``buf`` rows, so the k-th prefix of the
+    drop order fixes the count exactly when it contains enough
+    buffer-inactive candidates — a cumulative count over the drop
+    order.  Returns ``n + 1`` (sentinel) when no k can help (more
+    buffer-active workers than ``lam``; impossible for a member that
+    admitted those rows).
+    """
+    n = cand.shape[1]
+    if buf.shape[1]:
+        bufact = buf.any(axis=1)
+        newc = cand & ~bufact
+        m0 = bufact.sum(axis=1)
+    else:
+        newc = cand
+        m0 = 0
+    S = newc.sum(axis=1)
+    dn = S + m0 - lam                      # drops needed among newc
+    cum = np.cumsum(np.take_along_axis(newc, order, axis=1), axis=1)
+    ks = (cum >= np.maximum(dn, 1)[:, None]).argmax(axis=1) + 1
+    out = np.where(dn <= 0, 0, ks)
+    return np.where(dn > S, n + 1, out)
+
+
+def _must_drop_min(md: np.ndarray, rank: np.ndarray) -> np.ndarray:
+    """Minimal k whose drop prefix covers every must-drop worker."""
+    return np.where(md, rank, -1).max(axis=1, initial=-1) + 1
+
+
 class StragglerModel:
     """Interface: validate a full pattern or check incremental conformance."""
+
+    #: True when the model's verdict is unchanged by dropping all-clear
+    #: worker COLUMNS from the pattern (anything counting only straggler
+    #: occurrences).  Lets the batched gate check only the active
+    #: columns.  False for models tied to worker identity/layout
+    #: (e.g. replication-group coverage).
+    column_reducible: bool = False
+
+    #: Closed-form minimal-drop solver for the batched wait-out gate,
+    #: or None.  When every gate member defines it, the gate computes
+    #: each cell's greedy wait-out in O(1) array passes instead of
+    #: re-checking candidate variants.  Signature:
+    #: ``min_drops_batch(buf, cand, rank, order) -> (rows,) int``
+    #: where ``buf`` is this model's trailing committed window rows
+    #: ``(rows, kh, n)``, ``cand``/``rank``/``order`` describe the
+    #: candidate row and its fixed drop order, and the result is the
+    #: smallest k such that dropping the k cheapest candidates makes
+    #: the window admissible (``n + 1`` when impossible).  Soundness
+    #: requires admissibility to be MONOTONE in the drop prefix, which
+    #: holds for any model closed under removing stragglers.
+    min_drops_batch = None
 
     def conforms(self, pattern: np.ndarray) -> bool:
         raise NotImplementedError
@@ -89,6 +145,18 @@ class StragglerModel:
         windowed models override it with a single-window array check.
         """
         return self.conforms(win)
+
+    def suffix_ok_batch(self, win: np.ndarray) -> np.ndarray:
+        """Lockstep variant of ``suffix_ok``: ``win`` is ``(cells, T, n)``
+        (one trailing window per grid cell, last row = each cell's
+        candidate round); returns a ``(cells,)`` bool array.
+
+        The fallback loops over cells; every model in this module
+        overrides it with a single vectorized pass so the batched
+        ``ConformanceGate`` (``core.kernel.GateKernel``) costs one array
+        check per member per round regardless of the grid size.
+        """
+        return np.array([self.suffix_ok(w) for w in win], dtype=bool)
 
     def admits_round(self, history: np.ndarray, candidate: np.ndarray) -> bool:
         """Would appending ``candidate`` (bool[n]) keep the pattern valid?
@@ -113,10 +181,24 @@ class StragglerModel:
 
 @dataclass(frozen=True)
 class PerRoundModel(StragglerModel):
+    column_reducible = True
+
     s: int
 
     def conforms(self, pattern: np.ndarray) -> bool:
         return bool((pattern.sum(axis=1) <= self.s).all())
+
+    def suffix_ok_batch(self, win: np.ndarray) -> np.ndarray:
+        return (win.sum(axis=2) <= self.s).all(axis=1)
+
+    def min_drops_batch(self, buf, cand, rank, order) -> np.ndarray:
+        k = np.maximum(cand.sum(axis=1) - self.s, 0)
+        if buf.shape[1]:
+            # inside a multi-round window (WindowwiseOr member): the
+            # committed rows must conform too — drops cannot fix them
+            hist_ok = (buf.sum(axis=2) <= self.s).all(axis=1)
+            k = np.where(hist_ok, k, cand.shape[1] + 1)
+        return k
 
     @property
     def window(self) -> int:
@@ -125,6 +207,8 @@ class PerRoundModel(StragglerModel):
 
 @dataclass(frozen=True)
 class BurstyModel(StragglerModel):
+    column_reducible = True
+
     B: int
     W: int
     lam: int
@@ -160,6 +244,33 @@ class BurstyModel(StragglerModel):
         # inactive workers give last - first = -1 - T < B automatically
         return bool((last - first < self.B).all())
 
+    def suffix_ok_batch(self, win: np.ndarray) -> np.ndarray:
+        ok = win.any(axis=1).sum(axis=1) <= self.lam
+        # temporal: a violation is exactly a same-worker straggle pair
+        # >= B rounds apart (cheap bool ops; mirrors ``conforms``)
+        for d in range(self.B, win.shape[1]):
+            ok &= ~(win[:, :-d, :] & win[:, d:, :]).any(axis=(1, 2))
+        return ok
+
+    def min_drops_batch(self, buf, cand, rank, order) -> np.ndarray:
+        k = _spatial_min_drops(buf, cand, order, self.lam)
+        kh = buf.shape[1]
+        if kh >= self.B:
+            # candidates straggling >= B rounds before the new row can
+            # only be fixed by dropping them (window rows 0..kh-B)
+            md = cand & buf[:, : kh - self.B + 1].any(axis=1)
+            k = np.maximum(k, _must_drop_min(md, rank))
+            # a straggle pair >= B apart WITHIN the committed rows can
+            # never be fixed by dropping candidates.  Inside a
+            # WindowwiseOr the window may have been admitted through
+            # another arm, so this does happen (top-level members are
+            # alive-tracked and never see it).
+            bad = np.zeros(cand.shape[0], dtype=bool)
+            for d in range(self.B, kh):
+                bad |= (buf[:, :-d] & buf[:, d:]).any(axis=(1, 2))
+            k = np.where(bad, cand.shape[1] + 1, k)
+        return k
+
     @property
     def window(self) -> int:
         return self.W
@@ -167,6 +278,8 @@ class BurstyModel(StragglerModel):
 
 @dataclass(frozen=True)
 class ArbitraryModel(StragglerModel):
+    column_reducible = True
+
     N: int
     W: int
     lam: int
@@ -183,6 +296,25 @@ class ArbitraryModel(StragglerModel):
         if int(win.any(axis=0).sum()) > self.lam:
             return False
         return int(win.sum(axis=0).max(initial=0)) <= self.N
+
+    def suffix_ok_batch(self, win: np.ndarray) -> np.ndarray:
+        spatial = win.any(axis=1).sum(axis=1) <= self.lam
+        return spatial & (win.sum(axis=1).max(axis=1, initial=0) <= self.N)
+
+    def min_drops_batch(self, buf, cand, rank, order) -> np.ndarray:
+        k = _spatial_min_drops(buf, cand, order, self.lam)
+        # candidates already at N straggling rounds in the window must
+        # be dropped (with an empty buffer this still catches N == 0)
+        bufcnt = buf.sum(axis=1) if buf.shape[1] else 0
+        md = cand & (bufcnt >= self.N)
+        k = np.maximum(k, _must_drop_min(md, rank))
+        if buf.shape[1]:
+            # a worker already PAST N in the committed rows cannot be
+            # fixed by dropping candidates (reachable only inside a
+            # WindowwiseOr; top-level members are alive-tracked)
+            bad = (bufcnt > self.N).any(axis=1)
+            k = np.where(bad, cand.shape[1] + 1, k)
+        return k
 
     @property
     def window(self) -> int:
@@ -204,6 +336,12 @@ class MixtureModel(StragglerModel):
 
     def conforms(self, pattern: np.ndarray) -> bool:
         return any(m.conforms(pattern) for m in self.members)
+
+    def suffix_ok_batch(self, win: np.ndarray) -> np.ndarray:
+        raise TypeError(
+            "MixtureModel admission is stateful; use ConformanceGate "
+            "(or the batched GateKernel, which tracks members separately)"
+        )
 
     def admits_round(self, history: np.ndarray, candidate: np.ndarray) -> bool:
         raise TypeError(
@@ -229,6 +367,24 @@ class RepCoverageModel(StragglerModel):
         groups = pattern.reshape(pattern.shape[0], self.n // g, g)
         return bool((~groups.all(axis=2)).all())
 
+    def suffix_ok_batch(self, win: np.ndarray) -> np.ndarray:
+        g = self.s + 1
+        groups = win.reshape(win.shape[0], win.shape[1], self.n // g, g)
+        return (~groups.all(axis=3)).all(axis=(1, 2))
+
+    def min_drops_batch(self, buf, cand, rank, order) -> np.ndarray:
+        # a fully-straggling replication group is fixed by dropping its
+        # cheapest member, i.e. once the drop prefix reaches the
+        # group's minimum rank
+        g = self.s + 1
+        rows = cand.shape[0]
+        candg = cand.reshape(rows, self.n // g, g)
+        full = candg.all(axis=2)
+        minr = np.where(candg, rank.reshape(rows, self.n // g, g), self.n).min(
+            axis=2
+        )
+        return np.where(full, minr + 1, 0).max(axis=1, initial=0)
+
     @property
     def window(self) -> int:
         return 1
@@ -248,6 +404,10 @@ class WindowwiseOr(StragglerModel):
     members: tuple
     W: int
 
+    @property
+    def column_reducible(self) -> bool:
+        return all(m.column_reducible for m in self.members)
+
     def conforms(self, pattern: np.ndarray) -> bool:
         pat = np.asarray(pattern, dtype=bool)
         rounds = pat.shape[0]
@@ -261,6 +421,23 @@ class WindowwiseOr(StragglerModel):
 
     def suffix_ok(self, win: np.ndarray) -> bool:
         return any(m.conforms(win) for m in self.members)
+
+    def suffix_ok_batch(self, win: np.ndarray) -> np.ndarray:
+        # member suffix_ok == conforms on a single (<= W)-round window
+        # for every model in this module, so the OR vectorizes directly
+        out = np.zeros(win.shape[0], dtype=bool)
+        for m in self.members:
+            out |= m.suffix_ok_batch(win)
+        return out
+
+    def min_drops_batch(self, buf, cand, rank, order) -> np.ndarray:
+        # the window admits when ANY member does: minimum over members
+        # (each sees the full Or-window rows)
+        out = None
+        for m in self.members:
+            km = m.min_drops_batch(buf, cand, rank, order)
+            out = km if out is None else np.minimum(out, km)
+        return out
 
     @property
     def window(self) -> int:

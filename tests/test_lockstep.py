@@ -1,0 +1,296 @@
+"""Differential tests for the lockstep batch engine (``core.kernel`` +
+``simulate_lockstep``).
+
+Batched kernel stepping over a cells axis must reproduce the per-run
+scalar path (``simulate_fast``, itself bit-for-bit vs the legacy
+descriptor-path ``simulate`` — see ``tests/test_batch_engine.py``)
+EXACTLY: every ``SimResult`` field, across all schemes, both wait-out
+modes, ragged grids (mixed specs with different ``T``/``J``), and
+``strict=False`` infeasible-cell handling.  Also pins the seed-axis
+dedup contract of ``simulate_batch`` and the backend shim.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    GilbertElliotSource,
+    NoCodingScheme,
+    available_backends,
+    get_backend,
+    make_scheme,
+    register_scheme,
+    simulate,
+    simulate_batch,
+    simulate_fast,
+    simulate_lockstep,
+    use_backend,
+)
+from repro.core.schemes import _SCHEME_FACTORIES
+
+GE = dict(p_ns=0.08, p_sn=0.6, slow_factor=6.0)
+
+CONFIGS = [
+    ("gc", dict(s=3)),                     # 4 | 12 -> GC-Rep
+    ("gc", dict(s=3, prefer_rep=False)),   # general code
+    ("gc", dict(s=4)),                     # 5 does not divide 12 -> general
+    ("sr-sgc", dict(B=1, W=2, lam=3)),
+    ("sr-sgc", dict(B=2, W=3, lam=5)),
+    ("sr-sgc", dict(B=1, W=4, lam=4)),     # W >= B+3: multi-row gate
+                                           # buffers inside WindowwiseOr
+    ("m-sgc", dict(B=1, W=2, lam=3)),
+    ("m-sgc", dict(B=2, W=3, lam=5)),
+    ("m-sgc", dict(B=1, W=3, lam=12)),     # lam == n (Remark 3.2, no D2)
+    ("uncoded", {}),
+]
+
+
+def _assert_identical(ra, rb):
+    assert ra.scheme == rb.scheme
+    assert ra.total_time == rb.total_time
+    assert (ra.round_times == rb.round_times).all()
+    assert ra.job_done_round == rb.job_done_round
+    assert ra.job_done_time == rb.job_done_time
+    assert ra.waitouts == rb.waitouts
+    assert ra.effective_pattern.shape == rb.effective_pattern.shape
+    assert (ra.effective_pattern == rb.effective_pattern).all()
+    assert ra.normalized_load == rb.normalized_load
+
+
+def _traces(n, rounds, num, seed0=0):
+    return np.stack([
+        GilbertElliotSource(n=n, seed=seed0 + k, **GE).sample_delays(rounds)
+        for k in range(num)
+    ])
+
+
+@pytest.mark.parametrize("name,kw", CONFIGS,
+                         ids=[f"{n}-{i}" for i, (n, _) in enumerate(CONFIGS)])
+@pytest.mark.parametrize("waitout", ["selective", "all"])
+def test_lockstep_matches_fast_bitforbit(name, kw, waitout):
+    """Every cell of a lockstep run == the scalar fast run on that
+    trace (which == the legacy oracle, test_batch_engine)."""
+    n, J, cells = 12, 20, 3
+    traces = _traces(n, 26, cells, seed0=20)
+    rl = simulate_lockstep(name, kw, traces, alpha=6.0, J=J, waitout=waitout)
+    assert len(rl) == cells
+    for c in range(cells):
+        ref = simulate_fast(make_scheme(name, n, J, **dict(kw)), traces[c],
+                            alpha=6.0, J=J, waitout=waitout)
+        _assert_identical(ref, rl[c])
+
+
+def test_lockstep_matches_legacy_direct():
+    """Belt and braces: one lockstep cell straight against the legacy
+    descriptor-path simulate (not via simulate_fast)."""
+    n, J = 12, 18
+    traces = _traces(n, 24, 2, seed0=5)
+    for name, kw in [("m-sgc", dict(B=2, W=3, lam=5)),
+                     ("sr-sgc", dict(B=2, W=3, lam=5))]:
+        rl = simulate_lockstep(name, kw, traces, alpha=6.0, J=J)
+        for c in range(2):
+            ref = simulate(make_scheme(name, n, J, **dict(kw)), traces[c],
+                           alpha=6.0, J=J)
+            _assert_identical(ref, rl[c])
+
+
+@pytest.mark.parametrize("waitout", ["selective", "all"])
+def test_ragged_grid_mixed_specs(waitout):
+    """simulate_batch over mixed specs with different T/J: each spec
+    advances its own lockstep batch; every cell equals the scalar run
+    with that spec's fitted J."""
+    n, rounds = 12, 22
+    specs = [
+        ("gc", {"s": 3}),                   # T=0 -> J=22
+        ("sr-sgc", {"B": 2, "W": 3, "lam": 5}),  # T=2 -> J=20
+        ("m-sgc", {"B": 2, "W": 3, "lam": 5}),   # T=3 -> J=19
+        ("uncoded", {}),                    # T=0 -> J=22
+    ]
+    traces = _traces(n, rounds, 2, seed0=40)
+    grid = simulate_batch(specs, traces, alpha=6.0, waitout=waitout)
+    assert grid.shape == (len(specs), 1, 2)
+    for i, (name, params) in enumerate(specs):
+        T = make_scheme(name, n, 1, **dict(params)).T
+        J = rounds - T
+        for c in range(2):
+            res = grid[i, 0, c]
+            assert res.rounds == J + T
+            ref = simulate_fast(make_scheme(name, n, J, **dict(params)),
+                                traces[c], alpha=6.0, J=J, waitout=waitout)
+            _assert_identical(ref, res)
+
+
+def test_ragged_grid_strict_false_infeasible_cells():
+    n = 12
+    specs = [
+        ("sr-sgc", {"B": 2, "W": 4, "lam": 3}),  # B does not divide W-1
+        ("gc", {"s": 3}),
+        ("m-sgc", {"B": 3, "W": 2, "lam": 2}),   # needs B < W
+    ]
+    traces = _traces(n, 16, 2, seed0=60)
+    grid = simulate_batch(specs, traces, alpha=6.0, strict=False)
+    assert all(r is None for r in grid[0].ravel())
+    assert all(r is not None for r in grid[1].ravel())
+    assert all(r is None for r in grid[2].ravel())
+    with pytest.raises(ValueError):
+        simulate_batch(specs, traces, alpha=6.0, strict=True)
+
+
+def test_seed_axis_deduplicated():
+    """Load-only results are seed-invariant: the engine must run the
+    trace axis once and broadcast the SimResult objects across seeds."""
+    n = 12
+    specs = [("m-sgc", {"B": 1, "W": 2, "lam": 3}), ("gc", {"s": 3})]
+    traces = _traces(n, 16, 2, seed0=80)
+    grid = simulate_batch(specs, traces, seeds=(0, 5, 9), alpha=6.0)
+    assert grid.shape == (2, 3, 2)
+    for i in range(len(specs)):
+        for t in range(2):
+            assert grid[i, 1, t] is grid[i, 0, t]
+            assert grid[i, 2, t] is grid[i, 0, t]
+
+
+class _SeededUncoded(NoCodingScheme):
+    """Toy seed-sensitive scheme: the seed changes the normalized load
+    (hence the timing), and there is no registered kernel, so the batch
+    engine must fan the seed axis out on the fallback path."""
+
+    name = "seeded-uncoded"
+    seed_sensitive = True
+
+    def __init__(self, n, J, *, seed=0):
+        super().__init__(n, J)
+        self.seed = seed
+        self.normalized_load = (1.0 + 0.5 * (seed % 3)) / n
+
+
+@pytest.fixture
+def _seeded_scheme():
+    register_scheme("seeded-uncoded", lambda n, J, **kw: _SeededUncoded(n, J, **kw))
+    yield
+    _SCHEME_FACTORIES.pop("seeded-uncoded", None)
+
+
+def test_seed_sensitive_schemes_fan_out(_seeded_scheme):
+    n = 12
+    traces = _traces(n, 10, 2, seed0=90)
+    grid = simulate_batch([("seeded-uncoded", {})], traces, seeds=(0, 1),
+                          alpha=6.0)
+    assert grid[0, 0, 0] is not grid[0, 1, 0]
+    # seed changes the load, hence the runtime
+    assert grid[0, 0, 0].normalized_load != grid[0, 1, 0].normalized_load
+    assert grid[0, 0, 0].total_time != grid[0, 1, 0].total_time
+    # and each cell still equals its scalar run
+    ref = simulate_fast(_SeededUncoded(n, 10, seed=1), traces[1],
+                        alpha=6.0, J=10)
+    _assert_identical(ref, grid[0, 1, 1])
+
+
+def test_gate_kernel_windowwise_or_buffer_violation():
+    """Inside a WindowwiseOr, committed rows may violate one arm (the
+    window was admitted through another): the analytic minimal-drop
+    solver must not credit that arm.  Regression for a divergence
+    between GateKernel and the scalar ConformanceGate."""
+    from repro.core.kernel import GateKernel
+    from repro.core.straggler import (
+        BurstyModel,
+        ConformanceGate,
+        PerRoundModel,
+        WindowwiseOr,
+    )
+
+    n = 6
+    model = WindowwiseOr((BurstyModel(2, 4, 4), PerRoundModel(2)), 4)
+    # worker 0 straggles twice, 2 >= B rounds apart: each row is
+    # PerRound-admissible but the Bursty arm can never admit the window
+    rows = [np.eye(1, n, 0, dtype=bool)[0], np.zeros(n, bool),
+            np.eye(1, n, 0, dtype=bool)[0]]
+    cand = np.array([0, 1, 1, 1, 0, 0], dtype=bool)
+    cost = np.arange(n, dtype=float) + 1.0
+
+    scalar = ConformanceGate(model, n)
+    for r in rows:
+        assert scalar.admit(r.copy())
+    eff_s, waited_s = scalar.admit_partial(cand.copy(), cost)
+
+    gk = GateKernel(model, n)
+    gs = gk.init_state(1)
+    for r in rows:
+        gs, eff, _ = gk.admit_partial(gs, r[None], cost[None],
+                                      np.array([bool(r.any())]))
+        assert (eff[0] == r).all()
+    gs, eff_b, waited_b = gk.admit_partial(gs, cand[None], cost[None],
+                                           np.array([True]))
+    assert (eff_b[0] == eff_s).all()
+    assert sorted(np.flatnonzero(waited_b[0]).tolist()) == sorted(waited_s)
+
+
+def test_registered_scheme_extension_api():
+    """Extension-API contract for new scheme reproductions: the spec
+    probe must accept constructors that validate J (probe at trace
+    length, not J=1), register_kernel normalizes names like
+    register_scheme, and a kernel-side seed_sensitive flag fans the
+    seed axis out."""
+    from repro.core import has_kernel
+    from repro.core.kernel import (
+        _KERNELS,
+        UncodedKernel,
+        kernel_seed_sensitive,
+        register_kernel,
+    )
+
+    class JPicky(NoCodingScheme):
+        name = "j-picky"
+
+        def __init__(self, n, J, *, seed=0):
+            if J < 5:
+                raise ValueError("J must be >= 5")
+            super().__init__(n, J)
+
+    class JPickyKernel(UncodedKernel):
+        name = "j-picky"
+        seed_sensitive = True
+
+    register_scheme("J_Picky", lambda n, J, **kw: JPicky(n, J, **kw))
+    register_kernel("J_PICKY", JPickyKernel)  # name gets normalized
+    try:
+        assert has_kernel("j-picky") and has_kernel("J_Picky")
+        assert kernel_seed_sensitive("j-picky")
+        traces = np.stack([
+            GilbertElliotSource(n=8, seed=k, p_ns=0.0).sample_delays(12)
+            for k in range(2)
+        ])
+        grid = simulate_batch([("j-picky", {})], traces, seeds=(0, 1))
+        assert grid[0, 0, 0] is not None          # J=1 probe would raise
+        assert grid[0, 0, 0] is not grid[0, 1, 0]  # seed axis fanned out
+    finally:
+        _SCHEME_FACTORIES.pop("j-picky", None)
+        _KERNELS.pop("j-picky", None)
+
+
+def test_lockstep_rejects_short_trace():
+    with pytest.raises(ValueError):
+        simulate_lockstep("m-sgc", dict(B=2, W=3, lam=5),
+                          _traces(12, 3, 1), J=10)
+
+
+def test_backend_shim():
+    assert get_backend().name == "numpy"
+    assert "numpy" in available_backends()
+    with use_backend("numpy") as bk:
+        a = bk.xp.zeros((2, 3), dtype=bool)
+        a = bk.at_set(a, (0, 1), True)
+        a = bk.at_or(a, (slice(None), 2), True)
+        assert a.tolist() == [[False, True, True], [False, False, True]]
+    assert get_backend().name == "numpy"
+
+
+@pytest.mark.skipif("jax" not in available_backends(),
+                    reason="jax backend not registered")
+def test_jax_backend_functional_updates():
+    bk = get_backend("jax")
+    a = bk.xp.zeros((2, 3), dtype=bool)
+    b = bk.at_set(a, (0, 1), True)
+    assert not bool(a[0, 1]) and bool(b[0, 1])  # non-mutating
+    c = bk.at_or(b, (slice(None), 2), True)
+    assert c.tolist() == [[False, True, True], [False, False, True]]
