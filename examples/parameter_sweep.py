@@ -7,7 +7,13 @@ shim) — then reports the fastest parameterization per scheme: the
 Monte-Carlo version of the paper's App.-J probe procedure (what
 Table 1 / Figs. 15-18 aggregate).
 
-    PYTHONPATH=src python examples/parameter_sweep.py [n] [rounds]
+    PYTHONPATH=src python examples/parameter_sweep.py [n] [rounds] \
+        [--backend jax]
+
+``--backend jax`` stages each spec's sweep as one jitted ``lax.scan``
+(the device-resident lockstep path; see docs/scheme_kernels.md,
+"Running on jax") — the first call per spec compiles, repeats reuse
+the cached runner.
 """
 
 import sys
@@ -17,16 +23,29 @@ import numpy as np
 
 from repro.core import (
     GilbertElliotSource,
+    available_backends,
     estimate_alpha,
     get_backend,
     simulate_batch,
 )
 
-n = int(sys.argv[1]) if len(sys.argv) > 1 else 64
-rounds = int(sys.argv[2]) if len(sys.argv) > 2 else 60
+args = sys.argv[1:]
+backend = None
+if "--backend" in args:
+    i = args.index("--backend")
+    if i + 1 >= len(args):
+        sys.exit("usage: parameter_sweep.py [n] [rounds] [--backend NAME]")
+    backend = args[i + 1]
+    del args[i : i + 2]
+    if backend not in available_backends():
+        sys.exit(f"backend {backend!r} unavailable; have "
+                 f"{available_backends()}")
+n = int(args[0]) if len(args) > 0 else 64
+rounds = int(args[1]) if len(args) > 1 else 60
 
-print(f"kernel backend: {get_backend().name} "
-      f"(array namespace {get_backend().xp.__name__})")
+eff_backend = backend or get_backend().name
+print(f"kernel backend: {eff_backend} "
+      f"(array namespace {get_backend(eff_backend).xp.__name__})")
 
 # several independent GE traces of the Fig.-1-calibrated cluster
 # (traces are the Monte-Carlo axis: load-only sim results are
@@ -50,7 +69,8 @@ grids = {
 
 t0 = time.perf_counter()
 for scheme, specs in grids.items():
-    results = simulate_batch(specs, traces, alpha=alpha, strict=False)
+    results = simulate_batch(specs, traces, alpha=alpha, strict=False,
+                             backend=backend)
     best_params, best_t = None, float("inf")
     for i, (_, params) in enumerate(specs):
         runs = [r for r in results[i].ravel() if r is not None]

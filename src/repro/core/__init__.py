@@ -29,7 +29,13 @@ Typical sweep::
     total = results[0, 0, 0].total_time
 """
 
-from .backend import available_backends, get_backend, set_backend, use_backend
+from .backend import (
+    available_backends,
+    get_backend,
+    set_backend,
+    use_backend,
+    xp_of,
+)
 from .batch import (
     precompute_rounds,
     select_parameters_fast,
@@ -44,6 +50,8 @@ from .kernel import (
     has_kernel,
     make_kernel,
     register_kernel,
+    state_flatten,
+    state_unflatten,
 )
 from .bounds import (
     load_gc,

@@ -4,24 +4,35 @@ Mirrors the ``kernels/*/ref.py`` vs ``ops.py`` split at the library
 level: every array op in the lockstep hot loop (``core.kernel``) goes
 through the active :class:`Backend` — the array namespace lives in
 ``Backend.xp`` and all state updates go through the functional
-``at_set`` / ``at_or`` helpers — so porting the loop to device
-residency is a matter of selecting a backend whose ``xp`` is
-``jax.numpy`` and jitting the step functions, with no scheme-logic
-changes.
+``at_set`` / ``at_or`` helpers — and the control-flow hooks (``jit``,
+``scan``, ``where``, ``segment_sum``) have a plain-Python fallback, so
+the same kernel code runs eagerly on numpy or staged through
+``jax.jit`` + ``lax.scan`` with no scheme-logic changes.
 
 The **numpy** backend is the default and is what every bit-for-bit
 guarantee in ``tests/test_lockstep.py`` / ``tests/test_batch_engine.py``
 is stated against (its ``at_*`` helpers mutate in place and return the
 same array, which is safe because kernel states own their arrays).  The
 **jax** backend is registered when jax is importable; its ``at_*``
-helpers are non-mutating (``arr.at[idx].set``), which keeps the kernels
-honest about functional style, but jax numerics are an "allclose"
-contract, not a bit-identical one.
+helpers are non-mutating (``arr.at[idx].set``) and its ``concrete``
+flag is False, which tells the kernels that data-dependent Python
+branching (early exits, ``nonzero`` fancy-indexing) is unavailable —
+they switch to mask-select math with static shapes, the form
+``lax.scan`` can carry over the rounds axis.  jax numerics are an
+"allclose" contract, not a bit-identical one (exact for bool/int
+bookkeeping, allclose for float loads/runtimes — see
+docs/scheme_kernels.md).
+
+Set the environment variable ``REPRO_BACKEND=jax`` to select the jax
+backend process-wide (the CI matrix job uses this to run the lockstep
+differential suite on both backends).
 """
 
 from __future__ import annotations
 
 import contextlib
+import os
+import warnings
 
 import numpy as np
 
@@ -31,14 +42,20 @@ __all__ = [
     "get_backend",
     "set_backend",
     "use_backend",
+    "xp_of",
 ]
 
 
 class Backend:
-    """One array namespace + functional-update helpers."""
+    """One array namespace + functional-update and staging helpers."""
 
     name: str = "abstract"
     xp = None
+    #: True when arrays hold concrete values the kernels may branch on
+    #: (``if mask.any(): ...``).  False under jax, where ``step`` may be
+    #: traced inside ``jit``/``scan`` and every branch must be
+    #: mask-select with static shapes.
+    concrete: bool = True
 
     def at_set(self, arr, idx, val):
         """Functional ``arr[idx] = val``; returns the updated array."""
@@ -48,13 +65,67 @@ class Backend:
         """Functional ``arr[idx] |= val``; returns the updated array."""
         raise NotImplementedError
 
+    def where(self, cond, x, y):
+        """Elementwise select (``lax.select``-style; broadcasts)."""
+        return self.xp.where(cond, x, y)
+
+    def jit(self, fn, **kwargs):
+        """Stage ``fn`` for compiled execution (identity on numpy)."""
+        return fn
+
+    def scan(self, f, init, xs, length: int | None = None):
+        """``lax.scan`` contract: ``f(carry, x) -> (carry, y)`` over the
+        leading axis of the ``xs`` pytree; returns ``(carry, ys)`` with
+        the per-step ``y`` outputs stacked on a new leading axis.  The
+        numpy fallback is a plain Python loop, so kernels written
+        against ``scan`` run identically on both backends.
+        """
+        raise NotImplementedError
+
+    def argsort_stable(self, arr, axis: int = -1):
+        """Stable ascending argsort (ties keep first-index order)."""
+        raise NotImplementedError
+
+    def segment_sum(self, data, segment_ids, num_segments: int):
+        """Sum ``data`` rows into ``num_segments`` buckets by id."""
+        raise NotImplementedError
+
+    @property
+    def lax(self):
+        """The backend's lax-like namespace (None on numpy)."""
+        return None
+
     def __repr__(self) -> str:  # pragma: no cover - cosmetic
         return f"<Backend {self.name}>"
+
+
+def _tree_map(fn, tree):
+    """Minimal pytree map over nested tuples/lists/dicts (None passes
+    through) — enough for the numpy ``scan`` fallback to mirror
+    ``lax.scan``'s pytree handling."""
+    if tree is None:
+        return None
+    if isinstance(tree, (tuple, list)):
+        return type(tree)(_tree_map(fn, x) for x in tree)
+    if isinstance(tree, dict):
+        return {k: _tree_map(fn, v) for k, v in tree.items()}
+    return fn(tree)
+
+
+def _tree_leaves(tree):
+    if tree is None:
+        return []
+    if isinstance(tree, (tuple, list)):
+        return [leaf for x in tree for leaf in _tree_leaves(x)]
+    if isinstance(tree, dict):
+        return [leaf for v in tree.values() for leaf in _tree_leaves(v)]
+    return [tree]
 
 
 class _NumpyBackend(Backend):
     name = "numpy"
     xp = np
+    concrete = True
 
     def at_set(self, arr, idx, val):
         arr[idx] = val
@@ -64,21 +135,84 @@ class _NumpyBackend(Backend):
         arr[idx] |= val
         return arr
 
+    def scan(self, f, init, xs, length: int | None = None):
+        leaves = _tree_leaves(xs)
+        if length is None and not leaves:
+            raise ValueError("scan needs xs leaves or an explicit length")
+        n = length if length is not None else len(leaves[0])
+        carry = init
+        ys = []
+        for i in range(n):
+            x = _tree_map(lambda a: a[i], xs)
+            carry, y = f(carry, x)
+            ys.append(y)
+        if not ys:
+            return carry, None
+
+        # stack leaf-wise: rebuild the y structure with np.stack
+        def _zip_stack(trees):
+            first = trees[0]
+            if first is None:
+                return None
+            if isinstance(first, (tuple, list)):
+                return type(first)(
+                    _zip_stack([t[i] for t in trees])
+                    for i in range(len(first))
+                )
+            if isinstance(first, dict):
+                return {k: _zip_stack([t[k] for t in trees]) for k in first}
+            return np.stack(trees, axis=0)
+
+        return carry, _zip_stack(ys)
+
+    def argsort_stable(self, arr, axis: int = -1):
+        return np.argsort(arr, axis=axis, kind="stable")
+
+    def segment_sum(self, data, segment_ids, num_segments: int):
+        data = np.asarray(data)
+        out = np.zeros((num_segments,) + data.shape[1:], dtype=data.dtype)
+        np.add.at(out, np.asarray(segment_ids), data)
+        return out
+
 
 _REGISTRY: dict[str, Backend] = {"numpy": _NumpyBackend()}
 
 try:  # pragma: no cover - exercised only where jax is installed
+    import jax as _jax
     import jax.numpy as jnp
 
     class _JaxBackend(Backend):
         name = "jax"
         xp = jnp
+        concrete = False
 
         def at_set(self, arr, idx, val):
             return arr.at[idx].set(val)
 
         def at_or(self, arr, idx, val):
-            return arr.at[idx].set(arr[idx] | val)
+            # single scatter, no gather: max == or for bools; for int
+            # flag-words apply the OR to the selected elements in place
+            if arr.dtype == jnp.bool_:
+                return arr.at[idx].max(val)
+            return arr.at[idx].apply(lambda x: x | val)
+
+        def jit(self, fn, **kwargs):
+            return _jax.jit(fn, **kwargs)
+
+        def scan(self, f, init, xs, length: int | None = None):
+            return _jax.lax.scan(f, init, xs, length=length)
+
+        def argsort_stable(self, arr, axis: int = -1):
+            return jnp.argsort(arr, axis=axis, stable=True)
+
+        def segment_sum(self, data, segment_ids, num_segments: int):
+            return _jax.ops.segment_sum(
+                data, segment_ids, num_segments=num_segments
+            )
+
+        @property
+        def lax(self):
+            return _jax.lax
 
     _REGISTRY["jax"] = _JaxBackend()
 except Exception:  # noqa: BLE001 - jax absent or broken: numpy-only
@@ -117,3 +251,26 @@ def use_backend(name: str):
         yield _REGISTRY[name]
     finally:
         _ACTIVE = prev
+
+
+def xp_of(arr):
+    """The array namespace ``arr`` belongs to: numpy for ndarrays (and
+    scalars), ``jax.numpy`` for jax arrays/tracers.  Lets the batched
+    straggler-model hooks run unchanged under ``jit``/``scan``."""
+    if isinstance(arr, np.ndarray) or np.isscalar(arr):
+        return np
+    if "jax" in _REGISTRY:
+        return _REGISTRY["jax"].xp
+    return np  # pragma: no cover - non-numpy array without jax
+
+
+_env_backend = os.environ.get("REPRO_BACKEND", "").strip().lower()
+if _env_backend:
+    if _env_backend in _REGISTRY:
+        _ACTIVE = _env_backend
+    else:  # pragma: no cover - mis-set env var
+        warnings.warn(
+            f"REPRO_BACKEND={_env_backend!r} is not available "
+            f"(have: {available_backends()}); staying on numpy",
+            stacklevel=1,
+        )

@@ -40,12 +40,16 @@ from dataclasses import dataclass
 
 import numpy as np
 
+from .backend import available_backends, get_backend
 from .kernel import (
     GateKernel,
+    GateState,
     SchemeKernel,
     has_kernel,
     kernel_seed_sensitive,
     make_kernel,
+    state_flatten,
+    state_unflatten,
 )
 from .schemes import Scheme, make_scheme
 from .simulator import (
@@ -198,16 +202,31 @@ def simulate_lockstep(
     waitout: str = "selective",
     seed: int = 0,
     strict: bool = True,
+    backend: str | None = None,
 ) -> list[SimResult | None]:
     """Advance one spec through MANY traces in lockstep.
 
     One grid cell per trace: the functional kernel state
     (``core.kernel``) and the batched wait-out gate carry a leading
     cells axis, so each round of the whole grid is a handful of array
-    ops.  Every per-cell ``SimResult`` is bit-identical to the scalar
-    ``simulate_fast`` run on that trace (and hence to the legacy
-    ``simulate``): the timing math, gate decisions, and elapsed-time
-    accounting replicate the scalar expressions exactly.
+    ops.  On the default **numpy** backend every per-cell ``SimResult``
+    is bit-identical to the scalar ``simulate_fast`` run on that trace
+    (and hence to the legacy ``simulate``): the timing math, gate
+    decisions, and elapsed-time accounting replicate the scalar
+    expressions exactly.
+
+    With ``backend="jax"`` (or when jax is the process default, e.g.
+    ``REPRO_BACKEND=jax``) the whole (cells x rounds) sweep is staged
+    as ONE jitted ``lax.scan`` per spec: the per-round transition —
+    gate admission plus ``kernel.step`` — is a pure
+    ``(state, (t, stragglers)) -> (state, outputs)`` function carried
+    over the rounds axis, and results transfer to the host once.  The
+    jax path is an "allclose" contract against the numpy oracle: exact
+    on the bool/int bookkeeping (done rounds, dead flags, gate
+    patterns, waitouts), allclose on float loads/runtimes.  Specs the
+    staged path cannot express (load-adaptive ``round_loads``
+    overrides, gate members without analytic wait-out solvers) fall
+    back to this numpy engine transparently.
 
     ``traces``: (cells, rounds, n).  ``J = None`` fits ``J + T`` inside
     the trace (the App-J rule).  With ``strict=False``, cells whose
@@ -229,8 +248,27 @@ def simulate_lockstep(
         # _grid_J); callers like simulate_batch pass J pre-clamped
         J = _grid_J(rounds_avail, scheme.T, J, f"{name} {params}")
         scheme = make_scheme(name, n, J, seed=seed, **dict(params))
-    kernel = make_kernel(scheme)
-    gate = GateKernel(scheme.design_model, n)
+
+    if backend is not None and backend not in available_backends():
+        raise ValueError(
+            f"unknown backend {backend!r}; available: "
+            f"{available_backends()}"
+        )
+    bk_name = backend if backend is not None else get_backend().name
+    if bk_name == "jax" and "jax" in available_backends():
+        res = _simulate_lockstep_jax(
+            name, params, scheme, traces, mu=mu, alpha=alpha, J=J,
+            waitout=waitout, seed=seed, strict=strict,
+        )
+        if res is not None:
+            return res
+
+    # numpy engine — the bit-for-bit oracle (and the fallback for specs
+    # the staged path cannot express); kernels pinned to the numpy
+    # backend regardless of the process default
+    nbk = get_backend("numpy")
+    kernel = make_kernel(scheme, nbk)
+    gate = GateKernel(scheme.design_model, n, nbk)
     state = kernel.init_state(cells)
     gs = gate.init_state(cells)
     rounds = J + kernel.T
@@ -307,10 +345,53 @@ def simulate_lockstep(
     history = np.stack(gs.history, axis=0) if gs.history else np.zeros(
         (0, cells, n), dtype=bool
     )
+    return _assemble_results(
+        kernel.name, scheme.normalized_load, J, rt,
+        np.asarray(state.done_round), np.asarray(state.dead),
+        np.asarray(waitouts), history, strict, job_done_time,
+    )
+
+
+def _assemble_results(
+    scheme_name: str,
+    normalized_load: float,
+    J: int,
+    rt: np.ndarray,
+    done_round: np.ndarray,
+    dead: np.ndarray,
+    waitouts: np.ndarray,
+    history: np.ndarray,
+    strict: bool,
+    job_done_time: list[dict[int, float]] | None = None,
+) -> list[SimResult | None]:
+    """Build per-cell ``SimResult``s from lockstep outputs (host side,
+    shared by the numpy loop and the jax scan path).
+
+    ``job_done_time=None`` (the jax path) recomputes each job's elapsed
+    time as ``rt[c, :done_round].sum()`` — the same contiguous-row
+    numpy reduction the incremental accounting performs, so both paths
+    agree bitwise given identical ``rt``.
+    """
+    cells = rt.shape[0]
+    if strict and bool(dead.any()):
+        bad = np.flatnonzero(dead).tolist()
+        raise AssertionError(
+            f"{scheme_name}: wait-out contract violated in cell(s) "
+            f"{bad[:5]}"
+        )
+    if job_done_time is None:
+        job_done_time = []
+        for c in range(cells):
+            done = done_round[c]
+            job_done_time.append({
+                j: float(rt[c, : int(done[j])].sum())
+                for j in range(1, J + 1)
+                if int(done[j])
+            })
     results: list[SimResult | None] = []
     for c in range(cells):
-        done = state.done_round[c]
-        if bool(state.dead[c]) or not bool((done[1:] != 0).all()):
+        done = done_round[c]
+        if bool(dead[c]) or not bool((done[1:] != 0).all()):
             if strict:
                 missing = np.flatnonzero(done[1:] == 0) + 1
                 raise AssertionError(
@@ -320,17 +401,191 @@ def simulate_lockstep(
             continue
         results.append(
             SimResult(
-                scheme=kernel.name,
+                scheme=scheme_name,
                 total_time=float(rt[c].sum()),
                 round_times=rt[c].copy(),
                 job_done_round={j: int(done[j]) for j in range(1, J + 1)},
                 job_done_time=job_done_time[c],
                 waitouts=int(waitouts[c]),
                 effective_pattern=np.ascontiguousarray(history[:, c]),
-                normalized_load=scheme.normalized_load,
+                normalized_load=normalized_load,
             )
         )
     return results
+
+
+# staged-scan runners, one per (scheme, params, n, J, waitout[, seed])
+# spec: reused across simulate_lockstep calls so recompilation is paid
+# once per spec, not once per call (the ``lockstep-jax`` bench gates
+# this).  The seed enters the key only for seed-sensitive schemes —
+# load-only stepping never reads the code coefficients otherwise.
+# The registered factory/kernel OBJECTS are part of the key (hashed by
+# identity, and the key reference keeps them alive so a freed address
+# can never be recycled into a colliding id), so re-registering a
+# scheme or kernel — the extension API's register/unregister pattern —
+# never hits a stale compiled runner or a stale "unsupported" verdict;
+# the cache is capped FIFO so long parameter sweeps cannot hold every
+# compiled executable for the process lifetime.
+_JAX_RUNNERS: dict[tuple, object] = {}
+_JAX_RUNNERS_MAX = 256
+_JAX_UNSUPPORTED = object()
+
+
+def _jax_runner_key(scheme, params: dict, J: int, waitout: str, seed: int):
+    from .kernel import _KERNELS
+    from .schemes import _SCHEME_FACTORIES
+
+    sensitive = (
+        getattr(scheme, "seed_sensitive", False)
+        or kernel_seed_sensitive(scheme.name)
+    )
+    return (
+        scheme.name,
+        _SCHEME_FACTORIES.get(scheme.name),
+        _KERNELS.get(scheme.name),
+        tuple(sorted((str(k), v) for k, v in params.items())),
+        scheme.n,
+        J,
+        waitout,
+        seed if sensitive else None,
+    )
+
+
+def _build_jax_runner(scheme, J: int, waitout: str):
+    """Stage one spec's whole lockstep sweep as a jitted ``lax.scan``.
+
+    Returns ``_JAX_UNSUPPORTED`` for specs the static-shape path cannot
+    express: no registered kernel, load-adaptive ``round_loads``
+    overrides (the timing precompute assumes one constant load), or —
+    in selective wait-out — gate members without the analytic
+    ``min_drops_batch`` solver.
+    """
+    import jax.numpy as jnp
+
+    bkj = get_backend("jax")
+    try:
+        kernel = make_kernel(scheme, bkj)
+    except KeyError:
+        return _JAX_UNSUPPORTED
+    if type(kernel).round_loads is not SchemeKernel.round_loads:
+        return _JAX_UNSUPPORTED
+    gate = GateKernel(scheme.design_model, scheme.n, bkj)
+    if waitout == "selective" and not gate.analytic:
+        return _JAX_UNSUPPORTED
+    rounds = J + kernel.T
+    inv_n = 1.0 / kernel.n
+    selective = waitout == "selective"
+
+    def run(traces_dev, mu, alpha, load):
+        cells = traces_dev.shape[0]
+        extra = (load - inv_n) * alpha
+        times_all = traces_dev + extra              # (cells, rounds, n)
+        cls, flat0 = state_flatten(kernel.init_state(cells))
+        gs0 = gate.init_state(cells)
+
+        def body(carry, xs):
+            flat, bufs, alive = carry
+            t, times = xs
+            state = state_unflatten(cls, list(flat))
+            # identical expressions to the numpy engine, one round at
+            # a time under the scan
+            kappa = times.min(axis=1)
+            cutoff = (1.0 + mu) * kappa
+            tmax = times.max(axis=1)
+            cand = times > cutoff[:, None]
+            any_cand = cand.any(axis=1)
+            base = jnp.minimum(cutoff, tmax)
+            gs = GateState(bufs=list(bufs), alive=alive,
+                           filled=gate.full, history=None)
+            if selective:
+                gs, eff, waited = gate.admit_partial(
+                    gs, cand, times, any_cand
+                )
+                waited_any = waited.any(axis=1)
+                wmax = jnp.where(waited, times, -jnp.inf).max(axis=1)
+                dur_w = jnp.maximum(
+                    wmax, jnp.where(eff.any(axis=1), base, cutoff)
+                )
+                duration = jnp.where(waited_any, dur_w, base)
+                wflag = waited_any
+            else:
+                gs, eff, ok_any = gate.admit_all(gs, cand, any_cand)
+                wflag = any_cand & ~ok_any
+                duration = jnp.where(wflag, tmax, base)
+            state = kernel.step(state, t, eff)
+            _, flat = state_flatten(state)
+            return (
+                (tuple(flat), tuple(gs.bufs), gs.alive),
+                (duration, eff, wflag),
+            )
+
+        ts = jnp.arange(1, rounds + 1)
+        xs = (ts, jnp.swapaxes(times_all, 0, 1))
+        (flat_f, _, _), (dur, eff, wflag) = bkj.scan(
+            body, (tuple(flat0), tuple(gs0.bufs), gs0.alive), xs
+        )
+        state = state_unflatten(cls, list(flat_f))
+        return dict(
+            rt=jnp.swapaxes(dur, 0, 1),
+            done_round=state.done_round,
+            dead=state.dead,
+            waitouts=wflag.sum(axis=0),
+            history=eff,
+        )
+
+    return bkj.jit(run), kernel.name
+
+
+def _simulate_lockstep_jax(
+    name: str,
+    params: dict,
+    scheme,
+    traces: np.ndarray,
+    *,
+    mu: float,
+    alpha: float,
+    J: int,
+    waitout: str,
+    seed: int,
+    strict: bool,
+) -> list[SimResult | None] | None:
+    """The device-resident lockstep path; ``None`` means "spec not
+    stageable, use the numpy engine".
+
+    Runs under a scoped ``enable_x64`` so the float timing math is
+    f64 like the oracle — the bool/int bookkeeping then matches the
+    numpy engine exactly and loads/runtimes allclose (on CPU typically
+    bit-equal, but only allclose is contractual).
+    """
+    import jax
+    from jax.experimental import enable_x64
+
+    key = _jax_runner_key(scheme, params, J, waitout, seed)
+    with enable_x64():
+        entry = _JAX_RUNNERS.get(key)
+        if entry is None:
+            entry = _build_jax_runner(scheme, J, waitout)
+            while len(_JAX_RUNNERS) >= _JAX_RUNNERS_MAX:
+                _JAX_RUNNERS.pop(next(iter(_JAX_RUNNERS)))
+            _JAX_RUNNERS[key] = entry
+        if entry is _JAX_UNSUPPORTED:
+            return None
+        runner, kernel_name = entry
+        rounds = J + scheme.T
+        out = runner(
+            traces[:, :rounds], float(mu), float(alpha),
+            float(scheme.normalized_load),
+        )
+        host = jax.device_get(out)
+    return _assemble_results(
+        kernel_name, scheme.normalized_load, J,
+        np.asarray(host["rt"], dtype=np.float64),
+        np.asarray(host["done_round"]),
+        np.asarray(host["dead"]),
+        np.asarray(host["waitouts"]),
+        np.asarray(host["history"]),
+        strict, None,
+    )
 
 
 def simulate_batch(
@@ -343,6 +598,7 @@ def simulate_batch(
     J: int | None = None,
     waitout: str = "selective",
     strict: bool = True,
+    backend: str | None = None,
 ) -> np.ndarray:
     """Run a (specs x seeds x traces) grid on the lockstep engine.
 
@@ -364,6 +620,13 @@ def simulate_batch(
     ``traces``.  Schemes registered without a lockstep kernel fall back
     to per-cell ``simulate_fast`` runs.
     """
+    if backend is not None and backend not in available_backends():
+        # validate up front: under strict=False the per-spec loop
+        # swallows ValueErrors into None cells
+        raise ValueError(
+            f"unknown backend {backend!r}; available: "
+            f"{available_backends()}"
+        )
     traces = np.asarray(traces, dtype=np.float64)
     if traces.ndim == 2:
         traces = traces[None]
@@ -399,6 +662,7 @@ def simulate_batch(
                     row = simulate_lockstep(
                         name, params, traces, mu=mu, alpha=alpha, J=J_eff,
                         waitout=waitout, seed=seed, strict=strict,
+                        backend=backend,
                     )
                 except ValueError:
                     if strict:
@@ -449,6 +713,7 @@ def select_parameters_fast(
     grid: list[dict] | None = None,
     J: int | None = None,
     seed: int = 0,
+    backend: str | None = None,
 ) -> Candidate:
     """App.-J selection on the lockstep batch engine: replay the probe
     profile under each candidate parameterization (load-adjusted) and
@@ -464,6 +729,7 @@ def select_parameters_fast(
         [(name, params) for params in grid],
         np.asarray(probe_delays, dtype=np.float64)[None],
         seeds=(seed,), mu=mu, alpha=alpha, J=J, strict=False,
+        backend=backend,
     )
     # grid order is selection order: strict < keeps the earliest on
     # ties, like the legacy loop

@@ -38,6 +38,7 @@ admission is one ``suffix_ok_batch`` array check per member per round.
 
 from __future__ import annotations
 
+import dataclasses
 from dataclasses import dataclass, field
 
 import numpy as np
@@ -58,7 +59,25 @@ __all__ = [
     "register_kernel",
     "has_kernel",
     "kernel_seed_sensitive",
+    "state_flatten",
+    "state_unflatten",
 ]
+
+
+def state_flatten(state):
+    """Flatten any dataclass kernel state into ``(cls, [arrays...])`` —
+    the list is a valid jax pytree (None leaves allowed), so a scanned
+    round loop can carry ANY registered kernel's state without
+    per-class pytree registration."""
+    cls = type(state)
+    return cls, [getattr(state, f.name) for f in dataclasses.fields(cls)]
+
+
+def state_unflatten(cls, values):
+    """Inverse of :func:`state_flatten`."""
+    return cls(**{
+        f.name: v for f, v in zip(dataclasses.fields(cls), values)
+    })
 
 
 # ---------------------------------------------------------------------------
@@ -179,22 +198,49 @@ class SchemeKernel:
             dead=xp.zeros(cells, dtype=bool),
         )
 
-    def _pending(self, state, job: int):
-        """Cells still waiting on ``job`` (None when there are none —
-        lets kernels skip the decodability math for settled jobs)."""
-        pending = (state.done_round[:, job] == 0) & ~state.dead
-        return pending if bool(pending.any()) else None
+    def _valid(self, job):
+        """Is ``job`` inside [1, J]?  Returns the literal ``True`` on
+        the concrete (numpy) path — callers use it to skip work — and a
+        mask (possibly a traced scalar) on the staged path, where every
+        round's structure must be identical and range checks become
+        no-op writes (see ``_safe_col``)."""
+        if self.bk.concrete:
+            return bool(1 <= job <= self.J)
+        return (job >= 1) & (job <= self.J)
 
-    def _mark_done(self, state, job: int, pending, can, t: int,
-                   *, deadline: bool):
+    def _safe_col(self, job, valid):
+        """Column index for job-keyed ``(cells, J+1)`` arrays: ``job``
+        itself when valid, else the unused column 0 (so masked writes
+        on the staged path have a harmless target)."""
+        if valid is True:
+            return job
+        return self.bk.xp.where(valid, job, 0)
+
+    def _pending(self, state, job, valid=True):
+        """Cells still waiting on ``job`` (None when there are none —
+        a concrete-path-only skip of the decodability math)."""
+        jc = self._safe_col(job, valid)
+        pending = (state.done_round[:, jc] == 0) & ~state.dead
+        if self.bk.concrete and not pending.any():
+            return None
+        return pending
+
+    def _mark_done(self, state, job, pending, can, t,
+                   *, deadline: bool, valid=True):
         """Record newly decodable cells for ``job``; kill cells that
-        missed the deadline when ``deadline`` is set."""
-        bk = self.bk
+        missed the deadline when ``deadline`` is set.  ``valid`` masks
+        the whole update on the staged path (out-of-range jobs write
+        their unchanged column back to the scratch column 0)."""
+        bk, xp = self.bk, self.bk.xp
+        hit = pending & can if valid is True else pending & can & valid
+        jc = self._safe_col(job, valid)
+        col = xp.where(hit, t, state.done_round[:, jc])
         state.done_round = bk.at_set(
-            state.done_round, (pending & can, job), t
+            state.done_round, (slice(None), jc), col
         )
         if deadline:
-            state.dead = state.dead | (pending & ~can)
+            miss = pending & ~can if valid is True else pending & ~can & valid
+            state.dead = state.dead | miss
         return state
 
 
@@ -211,14 +257,16 @@ class GCKernel(SchemeKernel):
     def init_state(self, cells: int) -> GCState:
         return GCState(**self._base_arrays(cells))
 
-    def step(self, state: GCState, t: int, stragglers) -> GCState:
-        if not 1 <= t <= self.J:
+    def step(self, state: GCState, t, stragglers) -> GCState:
+        valid = self._valid(t)
+        if valid is False:
             return state
-        pending = self._pending(state, t)
+        pending = self._pending(state, t, valid)
         if pending is None:
             return state
         can = self.code.can_decode_mask_batch(~stragglers)
-        return self._mark_done(state, t, pending, can, t, deadline=True)
+        return self._mark_done(state, t, pending, can, t, deadline=True,
+                               valid=valid)
 
 
 class SRSGCKernel(SchemeKernel):
@@ -244,23 +292,48 @@ class SRSGCKernel(SchemeKernel):
             **self._base_arrays(cells),
         )
 
-    def step(self, state: SRSGCState, t: int, stragglers) -> SRSGCState:
+    def step(self, state: SRSGCState, t, stragglers) -> SRSGCState:
         bk, xp = self.bk, self.bk.xp
         n, B, J = self.n, self.B, self.J
         R = B + 1
+        conc = bk.concrete
         cells = state.cells
         tb = t - B
-        if 1 <= t <= J:
+        v_t, v_tb = self._valid(t), self._valid(tb)
+        if conc:
+            sl_t, sl_b = t % R, tb % R
+        else:
+            # staged path: keep the rings rotated so slot indices are
+            # STATIC — index i always holds key t - i (XLA CPU pays an
+            # order of magnitude more for dynamic-index slot updates
+            # than for one roll per round).  New index 0 = old index
+            # R - 1 = job t - R, exactly the slot being reclaimed.
+            state.returned = xp.roll(state.returned, 1, axis=1)
+            state.assigned = xp.roll(state.assigned, 1, axis=1)
+            state.n_fresh = xp.roll(state.n_fresh, 1, axis=1)
+            sl_t, sl_b = 0, B
+        if v_t is not False:
             # job-t enters: reclaim its ring slot (held job t-R, whose
             # deadline round t-1 has passed)
-            state.returned = bk.at_set(
-                state.returned, (slice(None), t % R), False
-            )
-            state.n_fresh = bk.at_set(state.n_fresh, (slice(None), t % R), 0)
+            if conc:
+                state.returned = bk.at_set(
+                    state.returned, (slice(None), sl_t), False
+                )
+                state.n_fresh = bk.at_set(
+                    state.n_fresh, (slice(None), sl_t), 0
+                )
+            else:
+                state.returned = bk.at_set(
+                    state.returned, (slice(None), sl_t),
+                    state.returned[:, sl_t] & ~v_t,
+                )
+                state.n_fresh = bk.at_set(
+                    state.n_fresh, (slice(None), sl_t),
+                    xp.where(v_t, 0, state.n_fresh[:, sl_t]),
+                )
         # Algorithm 1 retry rule, vectorized over cells
         jobs = xp.full((cells, n), t, dtype=xp.int64)
-        if 1 <= tb <= J:
-            sl_b = tb % R
+        if v_tb is not False:
             prev = state.assigned[:, sl_b]
             prev_ret = state.returned[:, sl_b]
             eligible = ~((prev == tb) & prev_ret)
@@ -277,31 +350,46 @@ class SRSGCKernel(SchemeKernel):
             budget = (n - self.s) - state.n_fresh[:, sl_b]
             csum = xp.cumsum(eligible, axis=1)
             retry = eligible & (csum - eligible < budget[:, None])
+            if v_tb is not True:
+                retry = retry & v_tb
             jobs = xp.where(retry, tb, jobs)
-        state.assigned = bk.at_set(state.assigned, (slice(None), t % R), jobs)
+        state.assigned = bk.at_set(state.assigned, (slice(None), sl_t), jobs)
         # observe
         ok = ~stragglers
-        for job in (t, tb):
-            if not 1 <= job <= J:
+        for job, valid, fresh, slj in (
+            (t, v_t, True, sl_t), (tb, v_tb, False, sl_b)
+        ):
+            if valid is False:
                 continue
             mask = ok & (jobs == job)
-            if job == t:
+            if valid is not True:
+                mask = mask & valid
+            if fresh:
+                nf = mask.sum(axis=1)
+                if valid is not True:
+                    nf = xp.where(valid, nf, state.n_fresh[:, slj])
                 state.n_fresh = bk.at_set(
-                    state.n_fresh, (slice(None), job % R), mask.sum(axis=1)
+                    state.n_fresh, (slice(None), slj), nf
                 )
+            # mask is already valid-gated, so or-ing it is a no-op for
+            # out-of-range jobs
             state.returned = bk.at_or(
-                state.returned, (slice(None), job % R), mask
+                state.returned, (slice(None), slj), mask
             )
         # collect; job t-B hits its Prop-3.1 deadline this round
-        for job in (t, tb):
-            if not 1 <= job <= J:
+        for job, valid, dl, slj in (
+            (t, v_t, False, sl_t), (tb, v_tb, True, sl_b)
+        ):
+            if valid is False:
                 continue
-            pending = self._pending(state, job)
+            pending = self._pending(state, job, valid)
             if pending is None:
                 continue
-            can = self.code.can_decode_mask_batch(state.returned[:, job % R])
+            # out-of-range jobs read a stale slot; the result is
+            # masked off by ``valid``
+            can = self.code.can_decode_mask_batch(state.returned[:, slj])
             state = self._mark_done(state, job, pending, can, t,
-                                    deadline=job == tb)
+                                    deadline=dl, valid=valid)
         return state
 
 
@@ -336,26 +424,48 @@ class MSGCKernel(SchemeKernel):
             **self._base_arrays(cells),
         )
 
-    def step(self, state: MSGCState, t: int, stragglers) -> MSGCState:
+    def step(self, state: MSGCState, t, stragglers) -> MSGCState:
         bk, xp = self.bk, self.bk.xp
         W, J, R = self.W, self.J, self.slots
+        conc = bk.concrete
         ok = ~stragglers
-        if 1 <= t <= J:
+        v_t = self._valid(t)
+        if not conc:
+            # staged path: keep the job-keyed rings rotated so slot
+            # index i always holds job t - i — every slot access below
+            # is then STATIC (one roll per round beats XLA's dynamic
+            # slot indexing by an order of magnitude on CPU).  New
+            # index 0 = old index R - 1 = job t - R, the reclaimed slot.
+            state.pend = xp.roll(state.pend, 1, axis=1)
+            if self.has_d2:
+                state.d2 = xp.roll(state.d2, 1, axis=1)
+        if v_t is not False:
             # job-t enters: reclaim its ring slot (job t-R's deadline
             # was round t-1)
-            sl = t % R
-            state.pend = bk.at_set(state.pend, (slice(None), sl), False)
-            if self.has_d2:
-                state.d2 = bk.at_set(state.d2, (slice(None), sl), False)
+            sl = t % R if conc else 0
+            if conc:
+                state.pend = bk.at_set(state.pend, (slice(None), sl), False)
+                if self.has_d2:
+                    state.d2 = bk.at_set(state.d2, (slice(None), sl), False)
+            else:
+                state.pend = bk.at_set(
+                    state.pend, (slice(None), sl), state.pend[:, sl] & ~v_t
+                )
+                if self.has_d2:
+                    state.d2 = bk.at_set(
+                        state.d2, (slice(None), sl), state.d2[:, sl] & ~v_t
+                    )
         for j in range(self.slots):
             job = t - j
-            if not 1 <= job <= J:
+            valid = self._valid(job)
+            if valid is False:
                 continue
-            sl = job % R
+            sl = job % R if conc else j
             if j <= W - 2:
                 # first attempt of D1 local chunk j: failures enqueue
+                add = stragglers if valid is True else stragglers & valid
                 state.pend = bk.at_or(
-                    state.pend, (slice(None), sl, slice(None), j), stragglers
+                    state.pend, (slice(None), sl, slice(None), j), add
                 )
             else:
                 # retry the queue head (first pending local chunk) if
@@ -363,25 +473,47 @@ class MSGCKernel(SchemeKernel):
                 pend_j = state.pend[:, sl]
                 has = pend_j.any(axis=2)
                 retry_ok = has & ok
-                if bool(retry_ok.any()):
-                    ci, wi = xp.nonzero(retry_ok)
-                    hd = pend_j.argmax(axis=2)[ci, wi]
+                if valid is not True:
+                    retry_ok = retry_ok & valid
+                if conc:
+                    if bool(retry_ok.any()):
+                        ci, wi = xp.nonzero(retry_ok)
+                        hd = pend_j.argmax(axis=2)[ci, wi]
+                        state.pend = bk.at_set(
+                            state.pend, (ci, sl, wi, hd), False
+                        )
+                else:
+                    # mask-select form of the same head clear: one-hot
+                    # on argmax instead of nonzero fancy-indexing
+                    hd = pend_j.argmax(axis=2)
+                    head = (
+                        xp.arange(W - 1)[None, None, :] == hd[:, :, None]
+                    )
+                    clear = retry_ok[:, :, None] & head
                     state.pend = bk.at_set(
-                        state.pend, (ci, sl, wi, hd), False
+                        state.pend, (slice(None), sl), pend_j & ~clear
                     )
                 if self.has_d2:
+                    d2add = ~has & ok
+                    if valid is not True:
+                        d2add = d2add & valid
                     state.d2 = bk.at_or(
-                        state.d2, (slice(None), sl, j - (W - 1)), ~has & ok
+                        state.d2, (slice(None), sl, j - (W - 1)), d2add
                     )
-        # collect every in-flight job; job t-T hits its Prop-3.2 deadline
-        for job in range(max(1, t - self.T), min(t, J) + 1):
-            pending = self._pending(state, job)
+        # collect every in-flight job (ascending, as the per-cell
+        # scheduler does); job t-T hits its Prop-3.2 deadline
+        for dj in range(self.T, -1, -1):
+            job = t - dj
+            valid = self._valid(job)
+            if valid is False:
+                continue
+            pending = self._pending(state, job, valid)
             if pending is None:
                 continue
-            sl = job % R
+            sl = job % R if conc else dj
             # D1 complete once all first attempts ran and no failures
             # remain queued; D2 needs n - lam returns in every group
-            if t - job >= W - 2:
+            if dj >= W - 2:
                 can = ~state.pend[:, sl].any(axis=(1, 2))
                 if self.has_d2:
                     can = can & (
@@ -390,7 +522,8 @@ class MSGCKernel(SchemeKernel):
             else:
                 can = xp.zeros(state.cells, dtype=bool)
             state = self._mark_done(
-                state, job, pending, can, t, deadline=job == t - self.T
+                state, job, pending, can, t, deadline=dj == self.T,
+                valid=valid,
             )
         return state
 
@@ -404,14 +537,16 @@ class UncodedKernel(SchemeKernel):
     def init_state(self, cells: int) -> UncodedState:
         return UncodedState(**self._base_arrays(cells))
 
-    def step(self, state: UncodedState, t: int, stragglers) -> UncodedState:
-        if not 1 <= t <= self.J:
+    def step(self, state: UncodedState, t, stragglers) -> UncodedState:
+        valid = self._valid(t)
+        if valid is False:
             return state
-        pending = self._pending(state, t)
+        pending = self._pending(state, t, valid)
         if pending is None:
             return state
         can = ~stragglers.any(axis=1)
-        return self._mark_done(state, t, pending, can, t, deadline=True)
+        return self._mark_done(state, t, pending, can, t, deadline=True,
+                               valid=valid)
 
 
 # ---------------------------------------------------------------------------
@@ -427,13 +562,17 @@ class GateState:
     ``filled`` is a plain int because lockstep commits one row per
     round for every cell; ``alive``: (cells, members) — a member that
     fails once in a cell is dead there forever.  ``history`` collects
-    the committed rows ((cells, n) each) for ``effective_pattern``.
-    """
+    the committed rows ((cells, n) each) for ``effective_pattern``;
+    the staged (scan) path sets it to None — committed rows come back
+    as scan outputs instead — and runs with ``filled`` pinned to the
+    full window (an unfilled buffer of all-clear rows is admissible
+    exactly when the true shorter suffix is, for every model closed
+    under removing stragglers)."""
 
     bufs: list
     alive: np.ndarray  # (cells, members) bool
     filled: int = 0
-    history: list = field(default_factory=list)
+    history: list | None = field(default_factory=list)
 
 
 class GateKernel:
@@ -455,6 +594,9 @@ class GateKernel:
         # every paper model has a closed-form minimal-drop solver; the
         # gate falls back to checking drop-count variants otherwise
         self.analytic = all(self._has_solver(m) for m in self.members)
+        #: ``filled`` value meaning "every buffer row is committed" —
+        #: what the staged scan path pins filled to (see GateState)
+        self.full = max(self.windows)
 
     @staticmethod
     def _has_solver(m) -> bool:
@@ -496,8 +638,9 @@ class GateKernel:
                 gs.bufs[i] = xp.concatenate(
                     [gs.bufs[i][:, 1:], row[:, None]], axis=1
                 )
-        gs.filled = min(gs.filled + 1, max(self.windows))
-        gs.history.append(xp.array(row))
+        gs.filled = min(gs.filled + 1, self.full)
+        if gs.history is not None:
+            gs.history.append(xp.array(row))
 
     def admit_partial(self, gs: GateState, candidate, cost, any_cand):
         """Batched selective wait-out (Remark 2.3, refined).
@@ -522,6 +665,8 @@ class GateKernel:
         """
         bk, xp = self.bk, self.bk.xp
         n = self.n
+        if not bk.concrete:
+            return self._admit_partial_traced(gs, candidate, cost, any_cand)
         cand = xp.array(candidate)
         waited = xp.zeros_like(cand)
         # count-based members only see straggler occurrences: restrict
@@ -620,6 +765,139 @@ class GateKernel:
         self._commit(gs, cand)
         return gs, cand, waited
 
+    def _admit_partial_traced(self, gs: GateState, candidate, cost,
+                              any_cand):
+        """Static-shape ``admit_partial`` for ``jit``/``scan`` staging.
+
+        The scalar gate's greedy loop itself, batched: a
+        ``lax.while_loop`` that drops the cheapest candidate from every
+        unresolved cell per iteration (``argmin`` breaks ties on the
+        first index, exactly the scalar rule) and re-checks the
+        members.  Rounds where every cell is admissible — the vast
+        majority — cost zero iterations, mirroring the numpy engine's
+        early exits; a full argsort-based rank would instead pay XLA's
+        (slow, serial on CPU) sort+scatter on every round.  Requires
+        vectorized member checks — ``simulate_lockstep`` only stages
+        gates whose members carry the analytic solvers, all of which
+        vectorize ``suffix_ok_batch``.
+        """
+        if not self.analytic:
+            raise NotImplementedError(
+                "staged admit_partial needs vectorized gate members; "
+                "run this model on the numpy backend"
+            )
+        xp, lax = self.bk.xp, self.bk.lax
+        n = self.n
+        # eager callers may pass numpy rows; convert up front so the
+        # xp_of dispatch inside the (traced) while_loop body stays on
+        # this backend's namespace
+        candidate = xp.asarray(candidate)
+        cost = xp.asarray(cost)
+        any_cand = xp.asarray(any_cand)
+        # specialize each member to this round's (fixed) buffer once —
+        # buffer-only statistics (Pallas gate_window.buffer_stats at
+        # large n) are paid per round, and every greedy iteration below
+        # is a candidate-only check
+        fns = [
+            m.admit_fn_batch(gs.bufs[i])
+            for i, m in enumerate(self.members)
+        ]
+
+        def member_ok(cand):
+            return xp.stack(
+                [gs.alive[:, i] & fns[i](cand) for i in range(len(fns))],
+                axis=1,
+            )
+
+        mok0 = member_ok(candidate)
+        resolved0 = mok0.any(axis=1)
+
+        def resolve_drops(_):
+            # empty-out fast path: admissibility is monotone in the
+            # drop prefix, so a row waits out EVERYTHING iff even its
+            # last survivor variant — the costliest candidate alone
+            # (largest index on cost ties, matching the stable drop
+            # order) — is inadmissible.  One member check settles those
+            # rows at once; the loop would grind one drop per iteration
+            # (the uncoded gate waits out every candidate every round).
+            key = xp.where(candidate, cost, -xp.inf)
+            wstar = n - 1 - xp.flip(key, axis=1).argmax(axis=1)
+            single = candidate & (xp.arange(n)[None, :] == wstar[:, None])
+            empty = (
+                ~resolved0
+                & candidate.any(axis=1)
+                & ~member_ok(single).any(axis=1)
+            )
+            waited0 = candidate & empty[:, None]
+            cand0 = candidate & ~empty[:, None]
+            lb_fns = [
+                m.drops_lower_bound_fn_batch(gs.bufs[i], cost)
+                for i, m in enumerate(self.members)
+            ]
+
+            def cond(st):
+                cand, _, _, resolved = st
+                return (~resolved & cand.any(axis=1)).any()
+
+            chunk = 4
+
+            def body(st):
+                cand, waited, final_ok, resolved = st
+                active = ~resolved & cand.any(axis=1)
+                # rank-free lower bound on the drops still needed: no
+                # alive member can admit before ITS bound is gone, and
+                # drops proceed in cost order, so the first L cheapest
+                # candidates can be retired without re-checking between
+                # them — the greedy outcome is unchanged (dead members
+                # impose no constraint; clamp >= 1 for loop progress)
+                bound = None
+                for i in range(len(lb_fns)):
+                    km = xp.where(gs.alive[:, i], lb_fns[i](cand), n + 1)
+                    bound = km if bound is None else xp.minimum(bound, km)
+                left = xp.where(active, xp.maximum(bound, 1), 0)
+                # retire up to `chunk` cheapest candidates this
+                # iteration, each sub-drop masked by the budget
+                idx = xp.arange(n)[None, :]
+                for j in range(chunk):
+                    key = xp.where(cand, cost, xp.inf)
+                    do = (
+                        (left > j)[:, None]
+                        & (idx == key.argmin(axis=1)[:, None])
+                        & cand
+                    )
+                    cand = cand & ~do
+                    waited = waited | do
+                mok = member_ok(cand)
+                # an emptied-out row commits without a check (alive
+                # stays untouched), like the scalar loop's exit path
+                newly = active & cand.any(axis=1) & mok.any(axis=1)
+                final_ok = xp.where(newly[:, None], mok, final_ok)
+                return cand, waited, final_ok, resolved | newly
+
+            return lax.while_loop(
+                cond, body, (cand0, waited0, mok0, resolved0)
+            )
+
+        def no_drops(_):
+            return (
+                candidate,
+                xp.zeros_like(candidate),
+                mok0,
+                resolved0,
+            )
+
+        # rounds where every cell already conforms — the common case —
+        # skip the whole drop resolution at runtime
+        need = (~resolved0 & candidate.any(axis=1)).any()
+        cand, waited, final_ok, resolved = lax.cond(
+            need, resolve_drops, no_drops, None
+        )
+        # alive narrows only where a non-empty candidate was admitted
+        upd = resolved & any_cand
+        gs.alive = xp.where(upd[:, None], final_ok, gs.alive)
+        self._commit(gs, cand)
+        return gs, cand, waited
+
     def admit_all(self, gs: GateState, candidate, any_cand):
         """Batched App-J all-or-nothing admission: per cell, admit the
         whole candidate set or wait out every worker (commit zeros).
@@ -627,6 +905,9 @@ class GateKernel:
         Returns ``(gs, effective (cells, n), admitted (cells,))``.
         """
         xp = self.bk.xp
+        if not self.bk.concrete:
+            candidate = xp.asarray(candidate)
+            any_cand = xp.asarray(any_cand)
         mok = self._member_ok(gs.bufs, gs.alive, candidate, gs.filled)
         ok_any = mok.any(axis=1)
         eff = candidate & ok_any[:, None]

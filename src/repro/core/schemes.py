@@ -130,13 +130,17 @@ class Scheme:
     # -- load-only fast path: single-cell kernel wrappers ---------------
     def _kernel(self):
         """Lazily build the 1-cell lockstep kernel state (None when no
-        kernel is registered for this scheme: descriptor fallback)."""
+        kernel is registered for this scheme: descriptor fallback).
+        Pinned to the numpy backend: the scalar path is the bit-for-bit
+        oracle and must not follow the process default (e.g.
+        ``REPRO_BACKEND=jax``) onto eager jax arrays."""
         kern = getattr(self, "_kern", None)
         if kern is None and not getattr(self, "_kern_missing", False):
+            from .backend import get_backend
             from .kernel import make_kernel
 
             try:
-                kern = self._kern = make_kernel(self)
+                kern = self._kern = make_kernel(self, get_backend("numpy"))
             except KeyError:
                 self._kern_missing = True
                 return None

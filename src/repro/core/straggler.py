@@ -34,6 +34,8 @@ from dataclasses import dataclass
 
 import numpy as np
 
+from .backend import xp_of
+
 __all__ = [
     "BurstyModel",
     "ArbitraryModel",
@@ -88,6 +90,7 @@ def _spatial_min_drops(
     buffer-active workers than ``lam``; impossible for a member that
     admitted those rows).
     """
+    xp = xp_of(cand)
     n = cand.shape[1]
     if buf.shape[1]:
         bufact = buf.any(axis=1)
@@ -98,15 +101,135 @@ def _spatial_min_drops(
         m0 = 0
     S = newc.sum(axis=1)
     dn = S + m0 - lam                      # drops needed among newc
-    cum = np.cumsum(np.take_along_axis(newc, order, axis=1), axis=1)
-    ks = (cum >= np.maximum(dn, 1)[:, None]).argmax(axis=1) + 1
-    out = np.where(dn <= 0, 0, ks)
-    return np.where(dn > S, n + 1, out)
+    cum = xp.cumsum(xp.take_along_axis(newc, order, axis=1), axis=1)
+    ks = (cum >= xp.maximum(dn, 1)[:, None]).argmax(axis=1) + 1
+    out = xp.where(dn <= 0, 0, ks)
+    return xp.where(dn > S, n + 1, out)
 
 
 def _must_drop_min(md: np.ndarray, rank: np.ndarray) -> np.ndarray:
     """Minimal k whose drop prefix covers every must-drop worker."""
-    return np.where(md, rank, -1).max(axis=1, initial=-1) + 1
+    return xp_of(md).where(md, rank, -1).max(axis=1, initial=-1) + 1
+
+
+def _prefix_upto_costliest(md, cand, cost):
+    """Candidates at-or-before the costliest must-drop worker in the
+    stable ascending-cost greedy order (cost ties break on the smaller
+    index, so the costliest must-drop is (max cost, then max index)
+    over ``md``).  Empty where ``md`` is empty."""
+    xp = xp_of(cand)
+    idx = xp.arange(cand.shape[1])[None, :]
+    cstar = xp.where(md, cost, -xp.inf).max(axis=1)
+    at_star = cost == cstar[:, None]
+    istar = xp.where(md & at_star, idx, -1).max(axis=1)
+    return cand & (
+        (cost < cstar[:, None]) | (at_star & (idx <= istar[:, None]))
+    )
+
+
+#: Worker count above which the jax suffix checks route through the
+#: Pallas ``gate_window`` kernel (one fused pass over the window buffer
+#: instead of several XLA reductions).  Below it the plain jnp
+#: reduction wins on launch overhead.
+PALLAS_WINDOW_MIN_N = 128
+
+
+def _any_rows(win):
+    """``win.any(axis=1)`` unrolled over the (tiny, static) round axis.
+
+    XLA CPU lowers middle-axis reductions of (cells, W, n) buffers to a
+    strided loop an order of magnitude slower than the equivalent
+    unrolled elementwise ops; W is a model window (<= a few rounds), so
+    unrolling is free.  Matches numpy semantics exactly.
+    """
+    if win.shape[1] == 0:
+        return xp_of(win).zeros(
+            (win.shape[0], win.shape[2]), dtype=bool
+        )
+    out = win[:, 0]
+    for r in range(1, win.shape[1]):
+        out = out | win[:, r]
+    return out
+
+
+def _sum_rows(win):
+    """``win.sum(axis=1)`` unrolled over the static round axis (see
+    :func:`_any_rows`); bool input sums to integer counts (the
+    backend's default int width)."""
+    xp = xp_of(win)
+    if win.shape[1] == 0:
+        return xp.zeros((win.shape[0], win.shape[2]), dtype=int)
+    out = win[:, 0] * 1
+    for r in range(1, win.shape[1]):
+        out = out + win[:, r]
+    return out
+
+
+def _window_stats(win, B: int):
+    """Fused per-cell suffix-window reductions for the batched gate.
+
+    ``win``: (cells, T, n) bool trailing windows.  Returns
+    ``(distinct, worker_max, round_max, pair_bad)`` where ``distinct``
+    counts workers active anywhere in the window, ``worker_max`` is the
+    max per-worker straggling-round count, ``round_max`` the max
+    per-round straggler count, and ``pair_bad`` flags a same-worker
+    straggle pair >= ``B`` rounds apart (pass ``B >= T`` to skip).
+
+    These four statistics are exactly what the windowed models'
+    ``suffix_ok_batch`` verdicts reduce to; on the jax path with
+    ``n >= PALLAS_WINDOW_MIN_N`` they come from the Pallas
+    ``gate_window`` kernel (``src/repro/kernels/gate_window``).
+    """
+    xp = xp_of(win)
+    if xp is not np and win.shape[-1] >= PALLAS_WINDOW_MIN_N:
+        try:
+            from repro.kernels.gate_window.ops import window_stats
+        except Exception:  # pragma: no cover - kernels pkg unavailable
+            window_stats = None
+        if window_stats is not None:
+            return window_stats(win, B)
+    distinct = _any_rows(win).sum(axis=1)
+    worker_max = _sum_rows(win).max(axis=1, initial=0)
+    round_max = win.sum(axis=2).max(axis=1, initial=0)
+    pair_bad = xp.zeros(win.shape[0], dtype=bool)
+    for d in range(B, win.shape[1]):
+        pair_bad = pair_bad | (win[:, :-d] & win[:, d:]).any(axis=(1, 2))
+    return distinct, worker_max, round_max, pair_bad
+
+
+def _buffer_stats(buf, B: int):
+    """Fixed per-round statistics of a committed window buffer
+    ``(cells, kh, n)``, computed once per round by the staged gate's
+    specialized admission closures (``admit_fn_batch``):
+
+    ``bufact[c, w]`` — worker straggles somewhere in the buffer;
+    ``bufcnt[c, w]`` — its straggling-round count; ``mdmap[c, w]`` —
+    a straggle in rows ``0..kh-B`` (would pair-violate, >= ``B``
+    apart, with the incoming candidate row at offset ``kh``);
+    ``pair_bad[c]`` — a >= ``B``-apart pair already inside the buffer.
+
+    jax buffers at ``n >= PALLAS_WINDOW_MIN_N`` come from the Pallas
+    ``gate_window.buffer_stats`` kernel in one fused pass.
+    """
+    xp = xp_of(buf)
+    kh = buf.shape[1]
+    if xp is not np and kh and buf.shape[-1] >= PALLAS_WINDOW_MIN_N:
+        try:
+            from repro.kernels.gate_window.ops import buffer_stats
+        except Exception:  # pragma: no cover - kernels pkg unavailable
+            buffer_stats = None
+        if buffer_stats is not None:
+            return buffer_stats(buf, B)
+    bufact = _any_rows(buf)
+    bufcnt = _sum_rows(buf)
+    if kh >= B:
+        mdmap = _any_rows(buf[:, : kh - B + 1])
+    else:
+        mdmap = xp.zeros_like(bufact)
+    pair_bad = xp.zeros(buf.shape[0], dtype=bool)
+    for d in range(B, kh):
+        pair_bad = pair_bad | (buf[:, :-d] & buf[:, d:]).any(axis=(1, 2))
+    return bufact, bufcnt, mdmap, pair_bad
 
 
 class StragglerModel:
@@ -135,6 +258,40 @@ class StragglerModel:
 
     def conforms(self, pattern: np.ndarray) -> bool:
         raise NotImplementedError
+
+    def drops_lower_bound_fn_batch(self, buf, cost):
+        """Rank-free lower bound on this member's minimal wait-out
+        drops, specialized (like :meth:`admit_fn_batch`) to the round's
+        fixed buffer and cost row: returns ``f(cand) -> (cells,) int``
+        (``n + 1``-style sentinels where the member can never admit).
+        The staged gate takes the min over alive members and retires
+        that many cheapest candidates per ``while_loop`` iteration
+        without re-checking after each one — sound because no member
+        can admit before its own bound is dropped, and drops always
+        proceed in cost order.  The default (0) is always valid, just
+        slow when wait-outs run deep.
+        """
+        xp = xp_of(cost)
+        return lambda cand: xp.zeros(cand.shape[0], dtype=xp.int64)
+
+    def admit_fn_batch(self, buf):
+        """Admission specialized to a FIXED committed buffer: returns
+        ``f(cand) -> (cells,) bool`` verdicts for the window
+        ``buf + cand``.  The staged gate builds one closure per member
+        per round and calls it once per greedy iteration, so overrides
+        precompute every buffer-only quantity up front; this default
+        re-runs the full suffix check per call.
+        """
+        if buf.shape[1] == 0:
+            return lambda cand: self.suffix_ok_batch(cand[:, None])
+        xp = xp_of(buf)
+
+        def f(cand):
+            return self.suffix_ok_batch(
+                xp.concatenate([buf, cand[:, None]], axis=1)
+            )
+
+        return f
 
     def suffix_ok(self, win: np.ndarray) -> bool:
         """Is the trailing window ``win`` (bool[<=W, n], last row = the
@@ -189,16 +346,37 @@ class PerRoundModel(StragglerModel):
         return bool((pattern.sum(axis=1) <= self.s).all())
 
     def suffix_ok_batch(self, win: np.ndarray) -> np.ndarray:
+        if not isinstance(win, np.ndarray):
+            # jax path: the fused window reduction (Pallas at large n)
+            _, _, round_max, _ = _window_stats(win, win.shape[1])
+            return round_max <= self.s
         return (win.sum(axis=2) <= self.s).all(axis=1)
 
     def min_drops_batch(self, buf, cand, rank, order) -> np.ndarray:
-        k = np.maximum(cand.sum(axis=1) - self.s, 0)
+        xp = xp_of(cand)
+        k = xp.maximum(cand.sum(axis=1) - self.s, 0)
         if buf.shape[1]:
             # inside a multi-round window (WindowwiseOr member): the
             # committed rows must conform too — drops cannot fix them
             hist_ok = (buf.sum(axis=2) <= self.s).all(axis=1)
-            k = np.where(hist_ok, k, cand.shape[1] + 1)
+            k = xp.where(hist_ok, k, cand.shape[1] + 1)
         return k
+
+    def admit_fn_batch(self, buf):
+        if buf.shape[1] == 0:
+            return lambda cand: cand.sum(axis=1) <= self.s
+        hist_ok = (buf.sum(axis=2) <= self.s).all(axis=1)
+        return lambda cand: hist_ok & (cand.sum(axis=1) <= self.s)
+
+    def drops_lower_bound_fn_batch(self, buf, cost):
+        xp = xp_of(cost)
+        s, sent = self.s, cost.shape[1] + 1
+        if buf.shape[1] == 0:
+            return lambda cand: xp.maximum(cand.sum(axis=1) - s, 0)
+        hist_ok = (buf.sum(axis=2) <= s).all(axis=1)
+        return lambda cand: xp.where(
+            hist_ok, xp.maximum(cand.sum(axis=1) - s, 0), sent
+        )
 
     @property
     def window(self) -> int:
@@ -245,6 +423,9 @@ class BurstyModel(StragglerModel):
         return bool((last - first < self.B).all())
 
     def suffix_ok_batch(self, win: np.ndarray) -> np.ndarray:
+        if not isinstance(win, np.ndarray):
+            distinct, _, _, pair_bad = _window_stats(win, self.B)
+            return (distinct <= self.lam) & ~pair_bad
         ok = win.any(axis=1).sum(axis=1) <= self.lam
         # temporal: a violation is exactly a same-worker straggle pair
         # >= B rounds apart (cheap bool ops; mirrors ``conforms``)
@@ -253,23 +434,65 @@ class BurstyModel(StragglerModel):
         return ok
 
     def min_drops_batch(self, buf, cand, rank, order) -> np.ndarray:
+        xp = xp_of(cand)
         k = _spatial_min_drops(buf, cand, order, self.lam)
         kh = buf.shape[1]
         if kh >= self.B:
             # candidates straggling >= B rounds before the new row can
             # only be fixed by dropping them (window rows 0..kh-B)
             md = cand & buf[:, : kh - self.B + 1].any(axis=1)
-            k = np.maximum(k, _must_drop_min(md, rank))
+            k = xp.maximum(k, _must_drop_min(md, rank))
             # a straggle pair >= B apart WITHIN the committed rows can
             # never be fixed by dropping candidates.  Inside a
             # WindowwiseOr the window may have been admitted through
             # another arm, so this does happen (top-level members are
             # alive-tracked and never see it).
-            bad = np.zeros(cand.shape[0], dtype=bool)
+            bad = xp.zeros(cand.shape[0], dtype=bool)
             for d in range(self.B, kh):
-                bad |= (buf[:, :-d] & buf[:, d:]).any(axis=(1, 2))
-            k = np.where(bad, cand.shape[1] + 1, k)
+                bad = bad | (buf[:, :-d] & buf[:, d:]).any(axis=(1, 2))
+            k = xp.where(bad, cand.shape[1] + 1, k)
         return k
+
+    def admit_fn_batch(self, buf):
+        if buf.shape[1] == 0:
+            return lambda cand: cand.sum(axis=1) <= self.lam
+        bufact, _, mdmap, pair_bad = _buffer_stats(buf, self.B)
+        base = bufact.sum(axis=1)
+        ok_fixed = ~pair_bad
+
+        def f(cand):
+            distinct = base + (cand & ~bufact).sum(axis=1)
+            return (
+                (distinct <= self.lam)
+                & ok_fixed
+                & ~(cand & mdmap).any(axis=1)
+            )
+
+        return f
+
+    def drops_lower_bound_fn_batch(self, buf, cost):
+        xp = xp_of(cost)
+        lam, sent = self.lam, cost.shape[1] + 1
+        if buf.shape[1] == 0:
+            return lambda cand: xp.maximum(cand.sum(axis=1) - lam, 0)
+        bufact, _, mdmap, pair_bad = _buffer_stats(buf, self.B)
+        base = bufact.sum(axis=1)
+
+        def f(cand):
+            # spatial shortfall: each drop removes at most one distinct
+            # straggler from the window
+            distinct = base + (cand & ~bufact).sum(axis=1)
+            k = xp.maximum(distinct - lam, 0)
+            # every candidate at-or-before the costliest must-drop
+            # worker is dropped before this member can admit
+            md = cand & mdmap
+            k = xp.maximum(
+                k,
+                (cand & _prefix_upto_costliest(md, cand, cost)).sum(axis=1),
+            )
+            return xp.where(pair_bad, sent, k)
+
+        return f
 
     @property
     def window(self) -> int:
@@ -298,23 +521,74 @@ class ArbitraryModel(StragglerModel):
         return int(win.sum(axis=0).max(initial=0)) <= self.N
 
     def suffix_ok_batch(self, win: np.ndarray) -> np.ndarray:
+        if not isinstance(win, np.ndarray):
+            distinct, worker_max, _, _ = _window_stats(win, win.shape[1])
+            return (distinct <= self.lam) & (worker_max <= self.N)
         spatial = win.any(axis=1).sum(axis=1) <= self.lam
         return spatial & (win.sum(axis=1).max(axis=1, initial=0) <= self.N)
 
     def min_drops_batch(self, buf, cand, rank, order) -> np.ndarray:
+        xp = xp_of(cand)
         k = _spatial_min_drops(buf, cand, order, self.lam)
         # candidates already at N straggling rounds in the window must
         # be dropped (with an empty buffer this still catches N == 0)
         bufcnt = buf.sum(axis=1) if buf.shape[1] else 0
         md = cand & (bufcnt >= self.N)
-        k = np.maximum(k, _must_drop_min(md, rank))
+        k = xp.maximum(k, _must_drop_min(md, rank))
         if buf.shape[1]:
             # a worker already PAST N in the committed rows cannot be
             # fixed by dropping candidates (reachable only inside a
             # WindowwiseOr; top-level members are alive-tracked)
             bad = (bufcnt > self.N).any(axis=1)
-            k = np.where(bad, cand.shape[1] + 1, k)
+            k = xp.where(bad, cand.shape[1] + 1, k)
         return k
+
+    def admit_fn_batch(self, buf):
+        if buf.shape[1] == 0:
+            if self.N >= 1:
+                return lambda cand: cand.sum(axis=1) <= self.lam
+            return lambda cand: (
+                (cand.sum(axis=1) <= self.lam) & ~cand.any(axis=1)
+            )
+        bufact, bufcnt, _, _ = _buffer_stats(buf, buf.shape[1] + 1)
+        base = bufact.sum(axis=1)
+        md = bufcnt >= self.N
+        ok_fixed = bufcnt.max(axis=1, initial=0) <= self.N
+
+        def f(cand):
+            distinct = base + (cand & ~bufact).sum(axis=1)
+            return (
+                (distinct <= self.lam)
+                & ok_fixed
+                & ~(cand & md).any(axis=1)
+            )
+
+        return f
+
+    def drops_lower_bound_fn_batch(self, buf, cost):
+        xp = xp_of(cost)
+        lam, N, sent = self.lam, self.N, cost.shape[1] + 1
+        if buf.shape[1] == 0:
+            if N == 0:
+                # every candidate must go
+                return lambda cand: cand.sum(axis=1)
+            return lambda cand: xp.maximum(cand.sum(axis=1) - lam, 0)
+        bufact, bufcnt, _, _ = _buffer_stats(buf, buf.shape[1] + 1)
+        base = bufact.sum(axis=1)
+        mdmap = bufcnt >= N
+        bad = (bufcnt > N).any(axis=1)
+
+        def f(cand):
+            distinct = base + (cand & ~bufact).sum(axis=1)
+            k = xp.maximum(distinct - lam, 0)
+            md = cand & mdmap
+            k = xp.maximum(
+                k,
+                (cand & _prefix_upto_costliest(md, cand, cost)).sum(axis=1),
+            )
+            return xp.where(bad, sent, k)
+
+        return f
 
     @property
     def window(self) -> int:
@@ -376,14 +650,34 @@ class RepCoverageModel(StragglerModel):
         # a fully-straggling replication group is fixed by dropping its
         # cheapest member, i.e. once the drop prefix reaches the
         # group's minimum rank
+        xp = xp_of(cand)
         g = self.s + 1
         rows = cand.shape[0]
         candg = cand.reshape(rows, self.n // g, g)
         full = candg.all(axis=2)
-        minr = np.where(candg, rank.reshape(rows, self.n // g, g), self.n).min(
+        minr = xp.where(candg, rank.reshape(rows, self.n // g, g), self.n).min(
             axis=2
         )
-        return np.where(full, minr + 1, 0).max(axis=1, initial=0)
+        return xp.where(full, minr + 1, 0).max(axis=1, initial=0)
+
+    def admit_fn_batch(self, buf):
+        g = self.s + 1
+
+        def f(cand):
+            groups = cand.reshape(cand.shape[0], self.n // g, g)
+            return ~groups.all(axis=2).any(axis=1)
+
+        return f
+
+    def drops_lower_bound_fn_batch(self, buf, cost):
+        # every fully-straggling group needs one (disjoint) drop
+        g = self.s + 1
+
+        def f(cand):
+            groups = cand.reshape(cand.shape[0], self.n // g, g)
+            return groups.all(axis=2).sum(axis=1)
+
+        return f
 
     @property
     def window(self) -> int:
@@ -425,19 +719,47 @@ class WindowwiseOr(StragglerModel):
     def suffix_ok_batch(self, win: np.ndarray) -> np.ndarray:
         # member suffix_ok == conforms on a single (<= W)-round window
         # for every model in this module, so the OR vectorizes directly
-        out = np.zeros(win.shape[0], dtype=bool)
+        out = xp_of(win).zeros(win.shape[0], dtype=bool)
         for m in self.members:
-            out |= m.suffix_ok_batch(win)
+            out = out | m.suffix_ok_batch(win)
         return out
 
     def min_drops_batch(self, buf, cand, rank, order) -> np.ndarray:
         # the window admits when ANY member does: minimum over members
         # (each sees the full Or-window rows)
+        xp = xp_of(cand)
         out = None
         for m in self.members:
             km = m.min_drops_batch(buf, cand, rank, order)
-            out = km if out is None else np.minimum(out, km)
+            out = km if out is None else xp.minimum(out, km)
         return out
+
+    def drops_lower_bound_fn_batch(self, buf, cost):
+        # admits via ANY member: the true minimum is the min over
+        # member minima, so the bound is the min over member bounds
+        xp = xp_of(cost)
+        fns = [m.drops_lower_bound_fn_batch(buf, cost) for m in self.members]
+
+        def f(cand):
+            out = None
+            for g in fns:
+                km = g(cand)
+                out = km if out is None else xp.minimum(out, km)
+            return out
+
+        return f
+
+    def admit_fn_batch(self, buf):
+        fns = [m.admit_fn_batch(buf) for m in self.members]
+
+        def f(cand):
+            out = None
+            for g in fns:
+                r = g(cand)
+                out = r if out is None else out | r
+            return out
+
+        return f
 
     @property
     def window(self) -> int:

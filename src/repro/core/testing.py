@@ -1,0 +1,97 @@
+"""Registered test fixtures for the batch engine's extension surface.
+
+The paper's schemes are all seed-INsensitive on the load-only path
+(coefficients never enter the timing math), so the batch engine's
+seed-axis fan-out — run the trace axis once per seed instead of
+broadcasting — is exercised by a deliberately seed-sensitive toy
+scheme.  It lives here (not in a test module) so every consumer of the
+extension API can reuse it: the differential suite, the jax-backend
+parity suite, and any future randomized-clustering reproduction that
+wants a working ``seed_sensitive`` example to crib from.
+
+``SeededUncodedScheme`` perturbs ``normalized_load`` by seed, which
+shifts every per-round time: two seeds must produce different runtimes
+through both the per-cell fallback path and the lockstep kernels, on
+every backend.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from .kernel import UncodedKernel, _KERNELS, register_kernel
+from .schemes import _SCHEME_FACTORIES, NoCodingScheme, register_scheme
+
+__all__ = [
+    "SEEDED_UNCODED",
+    "SeededUncodedScheme",
+    "SeededUncodedKernel",
+    "assert_sim_parity",
+    "register_testing_schemes",
+    "unregister_testing_schemes",
+]
+
+
+def assert_sim_parity(ref, got, *, exact: bool = True) -> None:
+    """The engine parity contract, in one place for every suite.
+
+    ``exact=True`` (numpy vs numpy) demands bit-for-bit equality on
+    every ``SimResult`` field.  ``exact=False`` is the jax contract:
+    the bool/int bookkeeping — done rounds, waitout counts, effective
+    gate patterns — must STILL be exact, while float loads/runtimes
+    are held to ``np.allclose``.
+    """
+    assert ref.scheme == got.scheme
+    assert ref.job_done_round == got.job_done_round
+    assert ref.waitouts == got.waitouts
+    assert ref.effective_pattern.shape == got.effective_pattern.shape
+    assert (ref.effective_pattern == got.effective_pattern).all()
+    assert ref.normalized_load == got.normalized_load
+    if exact:
+        assert ref.total_time == got.total_time
+        assert (ref.round_times == got.round_times).all()
+        assert ref.job_done_time == got.job_done_time
+    else:
+        assert np.allclose(ref.total_time, got.total_time)
+        assert np.allclose(ref.round_times, got.round_times)
+        assert sorted(ref.job_done_time) == sorted(got.job_done_time)
+        for j, v in ref.job_done_time.items():
+            assert np.isclose(v, got.job_done_time[j])
+
+SEEDED_UNCODED = "seeded-uncoded"
+
+
+class SeededUncodedScheme(NoCodingScheme):
+    """Uncoded baseline whose normalized load depends on the seed, so
+    load-only results differ per seed and the engine must fan the seed
+    axis out instead of broadcasting."""
+
+    name = SEEDED_UNCODED
+    seed_sensitive = True
+
+    def __init__(self, n: int, J: int, *, seed: int = 0):
+        super().__init__(n, J)
+        self.seed = seed
+        self.normalized_load = (1.0 + 0.5 * (seed % 3)) / n
+
+
+class SeededUncodedKernel(UncodedKernel):
+    """Lockstep kernel for :class:`SeededUncodedScheme`: the load (read
+    off the prototype) carries the seed dependence, so the kernel-side
+    ``seed_sensitive`` flag must force the fan-out too."""
+
+    name = SEEDED_UNCODED
+    seed_sensitive = True
+
+
+def register_testing_schemes() -> None:
+    """Idempotently register the fixtures with the live registries."""
+    register_scheme(
+        SEEDED_UNCODED, lambda n, J, **kw: SeededUncodedScheme(n, J, **kw)
+    )
+    register_kernel(SEEDED_UNCODED, SeededUncodedKernel)
+
+
+def unregister_testing_schemes() -> None:
+    _SCHEME_FACTORIES.pop(SEEDED_UNCODED, None)
+    _KERNELS.pop(SEEDED_UNCODED, None)

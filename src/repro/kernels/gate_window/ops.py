@@ -1,0 +1,82 @@
+"""Public wrapper around the gate-window Pallas kernel.
+
+Handles ragged shapes (pad cells to the block multiple, lane-pad n to
+128 — all-False padding never changes any of the four statistics),
+bool -> int32 plumbing, and backend selection: on CPU the kernel runs
+in interpret mode (still jit-staged, so it composes with the lockstep
+``lax.scan``), on TPU it compiles natively.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .gate_window import buffer_stats as _buf_kernel
+from .gate_window import window_stats as _win_kernel
+
+_LANE = 128
+_BLOCK_C = 512
+
+
+def _pad_plan(cells: int, n: int):
+    n_pad = -(-n // _LANE) * _LANE
+    block_c = min(_BLOCK_C, max(8, -(-cells // 8) * 8))
+    c_pad = -(-cells // block_c) * block_c
+    return n_pad, block_c, c_pad
+
+
+def _padded_i32(win, c_pad: int, n_pad: int):
+    cells, _, n = win.shape
+    w32 = win.astype(jnp.int32)
+    return jnp.pad(w32, ((0, c_pad - cells), (0, 0), (0, n_pad - n)))
+
+
+@functools.partial(jax.jit, static_argnames=("B", "interpret"))
+def window_stats(win: jax.Array, B: int, *, interpret: bool | None = None):
+    """Fused per-cell suffix-window reductions, any (cells, W, n) bool.
+
+    Returns ``(distinct, worker_max, round_max, pair_bad)`` — int32
+    counts of shape ``(cells,)`` plus the bool pair-violation flag —
+    exactly the ``core.straggler._window_stats`` contract.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    cells, W, n = win.shape
+    n_pad, block_c, c_pad = _pad_plan(cells, n)
+    distinct, worker_max, round_max, pair = _win_kernel(
+        _padded_i32(win, c_pad, n_pad), B,
+        block_c=block_c, interpret=interpret,
+    )
+    return (
+        distinct[:cells],
+        worker_max[:cells],
+        round_max[:cells],
+        pair[:cells] > 0,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("B", "interpret"))
+def buffer_stats(buf: jax.Array, B: int, *, interpret: bool | None = None):
+    """Fused fixed-buffer statistics, any (cells, kh >= 1, n) bool.
+
+    Returns ``(bufact, bufcnt, mdmap, pair_bad)`` — bool/int32 worker
+    maps of shape ``(cells, n)`` plus the bool buffer-internal pair
+    flag — exactly the ``core.straggler._buffer_stats`` contract.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    cells, _, n = buf.shape
+    n_pad, block_c, c_pad = _pad_plan(cells, n)
+    act, cnt, md, pair = _buf_kernel(
+        _padded_i32(buf, c_pad, n_pad), B,
+        block_c=block_c, interpret=interpret,
+    )
+    return (
+        act[:cells, :n] > 0,
+        cnt[:cells, :n],
+        md[:cells, :n] > 0,
+        pair[:cells, 0] > 0,
+    )

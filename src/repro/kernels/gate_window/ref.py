@@ -1,0 +1,39 @@
+"""Pure-jnp oracle for the gate-window statistics kernels."""
+
+import jax
+import jax.numpy as jnp
+
+
+def window_stats(win: jax.Array, B: int):
+    """Reference reductions on a (cells, W, n) bool window buffer.
+
+    Returns ``(distinct, worker_max, round_max, pair_bad)`` matching
+    ``ops.window_stats``: int32 counts plus a bool pair-violation flag
+    (same-worker straggle pair >= ``B`` rounds apart).
+    """
+    w = win.astype(jnp.int32)
+    distinct = w.max(axis=1).sum(axis=1).astype(jnp.int32)
+    worker_max = w.sum(axis=1).max(axis=1, initial=0).astype(jnp.int32)
+    round_max = w.sum(axis=2).max(axis=1, initial=0).astype(jnp.int32)
+    pair_bad = jnp.zeros(win.shape[0], dtype=bool)
+    for d in range(B, win.shape[1]):
+        pair_bad = pair_bad | (win[:, :-d] & win[:, d:]).any(axis=(1, 2))
+    return distinct, worker_max, round_max, pair_bad
+
+
+def buffer_stats(buf: jax.Array, B: int):
+    """Reference for ``ops.buffer_stats`` on a (cells, kh, n) buffer:
+    ``(bufact, bufcnt, mdmap, pair_bad)`` — worker activity / count
+    maps, the candidate-pair-violation map (straggles in rows
+    ``0..kh-B``), and the buffer-internal pair flag."""
+    kh = buf.shape[1]
+    bufact = buf.any(axis=1)
+    bufcnt = buf.sum(axis=1).astype(jnp.int32)
+    if kh >= B:
+        mdmap = buf[:, : kh - B + 1].any(axis=1)
+    else:
+        mdmap = jnp.zeros_like(bufact)
+    pair_bad = jnp.zeros(buf.shape[0], dtype=bool)
+    for d in range(B, kh):
+        pair_bad = pair_bad | (buf[:, :-d] & buf[:, d:]).any(axis=(1, 2))
+    return bufact, bufcnt, mdmap, pair_bad

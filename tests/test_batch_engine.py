@@ -15,6 +15,7 @@ import pytest
 from repro.core import (
     GilbertElliotSource,
     estimate_alpha,
+    get_backend,
     make_scheme,
     select_parameters,
     select_parameters_legacy,
@@ -22,6 +23,7 @@ from repro.core import (
     simulate_batch,
     simulate_fast,
 )
+from repro.core.testing import assert_sim_parity
 
 GE = dict(p_ns=0.08, p_sn=0.6, slow_factor=6.0)
 
@@ -39,15 +41,10 @@ CONFIGS = [
 
 
 def _assert_identical(ra, rb):
-    assert ra.scheme == rb.scheme
-    assert ra.total_time == rb.total_time
-    assert (ra.round_times == rb.round_times).all()
-    assert ra.job_done_round == rb.job_done_round
-    assert ra.job_done_time == rb.job_done_time
-    assert ra.waitouts == rb.waitouts
-    assert ra.effective_pattern.shape == rb.effective_pattern.shape
-    assert (ra.effective_pattern == rb.effective_pattern).all()
-    assert ra.normalized_load == rb.normalized_load
+    """Bit-for-bit on the numpy backend; under ``REPRO_BACKEND=jax``
+    (where ``simulate_batch`` routes through the jitted scan engine)
+    the bool/int bookkeeping stays exact and floats are allclose."""
+    assert_sim_parity(ra, rb, exact=get_backend().name == "numpy")
 
 
 @pytest.mark.parametrize("name,kw", CONFIGS,
