@@ -492,6 +492,109 @@ def bench_lockstep_jax(waves: int = 6, wave_traces: int = 8, repeats: int = 3):
     assert speedup >= 2.0, f"jax lockstep only {speedup:.2f}x numpy"
 
 
+def bench_grid_jax(num_specs: int = 64, num_traces: int = 8,
+                   rounds: int = 24, n: int = N_WORKERS,
+                   smoke: bool = False, repeats: int = 3):
+    """Grid-fused engine acceptance: a same-shape ``num_specs``-spec GC
+    sweep at n=256 through ``simulate_batch(backend="jax")``.
+
+    Gates: (1) ONE compilation per shape bucket, verified via the
+    runner-cache compile counter (the sweep folds into a single bucket,
+    so exactly one vmapped scan is built and jitted); (2) >= 3x
+    end-to-end — compiles included, how a fresh sweep actually pays —
+    over the per-spec cached-runner path (``fuse=False``), which
+    compiles one scan per spec; (3) grid-fused outputs exact on the
+    bool/int bookkeeping and allclose on floats vs the numpy oracle.
+    The ``grid-jax-smoke`` variant shrinks the sweep for tier-1 CI and
+    skips the timing gate (compile-count + parity only).
+    """
+    from repro.core import (
+        available_backends,
+        cache_stats,
+        clear_runner_cache,
+        grid_plan,
+    )
+
+    if "jax" not in available_backends():
+        print("gridjax.status,0,jax not installed — bench skipped")
+        return
+    # general-GC s sweep: every spec shares (scheme, n, J, T=0, waitout,
+    # cells) — `s` is consumed as a traced threshold, so ONE bucket
+    specs = [("gc", {"s": s, "prefer_rep": False})
+             for s in range(8, 8 + num_specs)]
+    traces = np.stack([
+        _source(SEED + 500 + k, n=n).sample_delays(rounds)
+        for k in range(num_traces)
+    ])
+    alpha = estimate_alpha(_source(n=n))
+
+    plan = grid_plan(specs, traces)
+    buckets = len(plan["buckets"])
+    print(f"gridjax.buckets,{buckets},{num_specs} same-shape specs at n={n}")
+    assert buckets == 1, f"expected one shape bucket, planner made {buckets}"
+
+    clear_runner_cache()
+    t0 = time.perf_counter()
+    fused = simulate_batch(specs, traces, mu=MU, alpha=alpha,
+                           backend="jax", fuse=True)
+    t_fused_e2e = time.perf_counter() - t0
+    compiles = cache_stats()["compiles"]
+    print(f"gridjax.compiles,{compiles},acceptance == {buckets} "
+          "(one per shape bucket)")
+    assert compiles == buckets, (
+        f"{compiles} runner compiles for {buckets} shape bucket(s)"
+    )
+
+    # parity: exact bool/int bookkeeping, allclose floats vs the oracle
+    from repro.core.testing import assert_sim_parity
+
+    oracle = simulate_batch(specs, traces, mu=MU, alpha=alpha,
+                            backend="numpy")
+    for si in range(len(specs)):
+        for c in range(num_traces):
+            assert_sim_parity(oracle[si, 0, c], fused[si, 0, c],
+                              exact=False)
+    print(f"gridjax.parity,{len(specs) * num_traces},cells vs numpy oracle")
+
+    if smoke:
+        print(f"gridjax.fused_e2e_s,{t_fused_e2e:.3f},smoke (no timing gate)")
+        return
+
+    # steady state: the bucket runner is cached
+    t_fused = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        simulate_batch(specs, traces, mu=MU, alpha=alpha,
+                       backend="jax", fuse=True)
+        t_fused = min(t_fused, time.perf_counter() - t0)
+
+    # per-spec cached-runner path: one compile per spec end-to-end
+    clear_runner_cache()
+    t0 = time.perf_counter()
+    simulate_batch(specs, traces, mu=MU, alpha=alpha,
+                   backend="jax", fuse=False)
+    t_spec_e2e = time.perf_counter() - t0
+    spec_compiles = cache_stats()["compiles"]
+    t_spec = float("inf")
+    for _ in range(2):
+        t0 = time.perf_counter()
+        simulate_batch(specs, traces, mu=MU, alpha=alpha,
+                       backend="jax", fuse=False)
+        t_spec = min(t_spec, time.perf_counter() - t0)
+
+    speedup = t_spec_e2e / t_fused_e2e
+    print(f"gridjax.fused_e2e_s,{t_fused_e2e:.3f},1 compile + sweep")
+    print(f"gridjax.perspec_e2e_s,{t_spec_e2e:.3f},{spec_compiles} compiles "
+          "+ sweep")
+    print(f"gridjax.fused_steady_s,{t_fused:.3f},cache warm")
+    print(f"gridjax.perspec_steady_s,{t_spec:.3f},cache warm")
+    print(f"gridjax.steady_speedup,{t_spec / t_fused:.2f},informational")
+    print(f"gridjax.e2e_speedup,{speedup:.2f},acceptance >= 3x")
+    assert speedup >= 3.0, (
+        f"grid fusion only {speedup:.2f}x the per-spec runners end-to-end"
+    )
+
+
 def bench_batch_montecarlo():
     """Monte-Carlo scheme comparison on the batch engine: Table-1
     operating points x independent GE traces in one simulate_batch
@@ -543,6 +646,10 @@ BENCHES = {
     "batchmc": bench_batch_montecarlo,
     "lockstep": bench_lockstep,
     "lockstep-jax": bench_lockstep_jax,
+    "grid-jax": bench_grid_jax,
+    "grid-jax-smoke": lambda: bench_grid_jax(
+        num_specs=8, num_traces=4, rounds=20, n=64, smoke=True
+    ),
     "roofline": bench_roofline,
 }
 

@@ -8,12 +8,15 @@ Monte-Carlo version of the paper's App.-J probe procedure (what
 Table 1 / Figs. 15-18 aggregate).
 
     PYTHONPATH=src python examples/parameter_sweep.py [n] [rounds] \
-        [--backend jax]
+        [--backend jax] [--fuse | --no-fuse]
 
-``--backend jax`` stages each spec's sweep as one jitted ``lax.scan``
-(the device-resident lockstep path; see docs/scheme_kernels.md,
-"Running on jax") — the first call per spec compiles, repeats reuse
-the cached runner.
+``--backend jax`` runs on the device-resident lockstep path (see
+docs/scheme_kernels.md, "Running on jax").  Grid fusion is ON by
+default there: the planner buckets specs by static shape key and each
+bucket compiles as ONE vmapped ``lax.scan`` — the per-scheme lines
+below report how many shape buckets each sweep folded into and how
+many runners were actually compiled, so the win over ``--no-fuse``
+(one compilation per spec) is visible directly.
 """
 
 import sys
@@ -24,8 +27,10 @@ import numpy as np
 from repro.core import (
     GilbertElliotSource,
     available_backends,
+    cache_stats,
     estimate_alpha,
     get_backend,
+    grid_plan,
     simulate_batch,
 )
 
@@ -34,18 +39,30 @@ backend = None
 if "--backend" in args:
     i = args.index("--backend")
     if i + 1 >= len(args):
-        sys.exit("usage: parameter_sweep.py [n] [rounds] [--backend NAME]")
+        sys.exit("usage: parameter_sweep.py [n] [rounds] [--backend NAME] "
+                 "[--fuse | --no-fuse]")
     backend = args[i + 1]
     del args[i : i + 2]
     if backend not in available_backends():
         sys.exit(f"backend {backend!r} unavailable; have "
                  f"{available_backends()}")
+fuse = None
+if "--fuse" in args:
+    fuse = True
+    args.remove("--fuse")
+if "--no-fuse" in args:
+    fuse = False
+    args.remove("--no-fuse")
 n = int(args[0]) if len(args) > 0 else 64
 rounds = int(args[1]) if len(args) > 1 else 60
 
+from repro.core.batch import _fuse_enabled  # noqa: E402
+
 eff_backend = backend or get_backend().name
+fusing = eff_backend == "jax" and _fuse_enabled(fuse)
 print(f"kernel backend: {eff_backend} "
-      f"(array namespace {get_backend(eff_backend).xp.__name__})")
+      f"(array namespace {get_backend(eff_backend).xp.__name__}, "
+      f"grid fusion {'on' if fusing else 'off'})")
 
 # several independent GE traces of the Fig.-1-calibrated cluster
 # (traces are the Monte-Carlo axis: load-only sim results are
@@ -69,8 +86,10 @@ grids = {
 
 t0 = time.perf_counter()
 for scheme, specs in grids.items():
+    compiles0 = cache_stats()["compiles"]
     results = simulate_batch(specs, traces, alpha=alpha, strict=False,
-                             backend=backend)
+                             backend=backend, fuse=fuse)
+    compiled = cache_stats()["compiles"] - compiles0
     best_params, best_t = None, float("inf")
     for i, (_, params) in enumerate(specs):
         runs = [r for r in results[i].ravel() if r is not None]
@@ -82,6 +101,15 @@ for scheme, specs in grids.items():
             best_params, best_t = params, per_job
     print(f"{scheme:8s} best={best_params} per_job={best_t:.3f}s "
           f"({len(specs) * traces.shape[0]} sims)")
+    if eff_backend == "jax":
+        plan = grid_plan(specs, traces)
+        sizes = sorted((len(b["specs"]) for b in plan["buckets"]),
+                       reverse=True)
+        print(f"         {len(specs)} specs -> {len(plan['buckets'])} "
+              f"shape buckets {sizes} "
+              f"(+{len(plan['fallback'])} per-spec fallbacks, "
+              f"{len(plan['infeasible'])} infeasible), "
+              f"{compiled} runner compile(s) this sweep")
 elapsed = time.perf_counter() - t0
 total = sum(len(g) for g in grids.values()) * traces.shape[0]
 print(f"swept {total} simulations (n={n}, {rounds} rounds) in {elapsed:.2f}s")

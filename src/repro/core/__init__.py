@@ -37,6 +37,9 @@ from .backend import (
     xp_of,
 )
 from .batch import (
+    cache_stats,
+    clear_runner_cache,
+    grid_plan,
     precompute_rounds,
     select_parameters_fast,
     simulate_batch,
@@ -134,6 +137,9 @@ __all__ = [
     "simulate_lockstep",
     "select_parameters_fast",
     "precompute_rounds",
+    "grid_plan",
+    "cache_stats",
+    "clear_runner_cache",
     "register_scheme",
     "SchemeKernel",
     "SchemeState",

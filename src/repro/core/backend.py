@@ -5,7 +5,8 @@ level: every array op in the lockstep hot loop (``core.kernel``) goes
 through the active :class:`Backend` — the array namespace lives in
 ``Backend.xp`` and all state updates go through the functional
 ``at_set`` / ``at_or`` helpers — and the control-flow hooks (``jit``,
-``scan``, ``where``, ``segment_sum``) have a plain-Python fallback, so
+``scan``, ``vmap``, ``where``, ``segment_sum``) have a plain-Python
+fallback, so
 the same kernel code runs eagerly on numpy or staged through
 ``jax.jit`` + ``lax.scan`` with no scheme-logic changes.
 
@@ -82,6 +83,19 @@ class Backend:
         """
         raise NotImplementedError
 
+    def vmap(self, fn, in_axes=0, out_axes=0):
+        """``jax.vmap`` contract: map ``fn`` over a leading batch axis
+        of its (pytree) arguments; ``in_axes`` is an int applied to all
+        arguments or a per-argument tuple with ``None`` meaning
+        "broadcast, don't map".  The grid-fused batch engine wraps one
+        spec's staged lockstep sweep with this to run a whole shape
+        bucket of stacked specs under a single compilation.  The numpy
+        fallback is a plain Python loop over the mapped axis with
+        leaf-wise stacking, so vmapped code runs identically (just
+        eagerly) on both backends.
+        """
+        raise NotImplementedError
+
     def argsort_stable(self, arr, axis: int = -1):
         """Stable ascending argsort (ties keep first-index order)."""
         raise NotImplementedError
@@ -122,6 +136,22 @@ def _tree_leaves(tree):
     return [tree]
 
 
+def _zip_stack(trees):
+    """Stack a list of structurally identical pytrees leaf-wise on a new
+    leading axis — how the numpy ``scan``/``vmap`` fallbacks assemble
+    their per-step / per-lane outputs into ``lax``-shaped results."""
+    first = trees[0]
+    if first is None:
+        return None
+    if isinstance(first, (tuple, list)):
+        return type(first)(
+            _zip_stack([t[i] for t in trees]) for i in range(len(first))
+        )
+    if isinstance(first, dict):
+        return {k: _zip_stack([t[k] for t in trees]) for k in first}
+    return np.stack(trees, axis=0)
+
+
 class _NumpyBackend(Backend):
     name = "numpy"
     xp = np
@@ -148,22 +178,44 @@ class _NumpyBackend(Backend):
             ys.append(y)
         if not ys:
             return carry, None
-
-        # stack leaf-wise: rebuild the y structure with np.stack
-        def _zip_stack(trees):
-            first = trees[0]
-            if first is None:
-                return None
-            if isinstance(first, (tuple, list)):
-                return type(first)(
-                    _zip_stack([t[i] for t in trees])
-                    for i in range(len(first))
-                )
-            if isinstance(first, dict):
-                return {k: _zip_stack([t[k] for t in trees]) for k in first}
-            return np.stack(trees, axis=0)
-
         return carry, _zip_stack(ys)
+
+    def vmap(self, fn, in_axes=0, out_axes=0):
+        if out_axes != 0:
+            raise NotImplementedError("numpy vmap fallback maps to axis 0")
+
+        def mapped(*args):
+            axes = (
+                tuple(in_axes)
+                if isinstance(in_axes, (tuple, list))
+                else (in_axes,) * len(args)
+            )
+            if len(axes) != len(args):
+                raise ValueError(
+                    f"vmap got {len(args)} args but in_axes has "
+                    f"{len(axes)} entries"
+                )
+            size = None
+            for a, ax in zip(args, axes):
+                if ax is None:
+                    continue
+                leaves = _tree_leaves(a)
+                if leaves:
+                    size = np.shape(leaves[0])[ax]
+                    break
+            if size is None:
+                raise ValueError("vmap needs at least one mapped input")
+            ys = []
+            for i in range(size):
+                call = [
+                    a if ax is None
+                    else _tree_map(lambda x: np.take(x, i, axis=ax), a)
+                    for a, ax in zip(args, axes)
+                ]
+                ys.append(fn(*call))
+            return _zip_stack(ys)
+
+        return mapped
 
     def argsort_stable(self, arr, axis: int = -1):
         return np.argsort(arr, axis=axis, kind="stable")
@@ -201,6 +253,11 @@ try:  # pragma: no cover - exercised only where jax is installed
 
         def scan(self, f, init, xs, length: int | None = None):
             return _jax.lax.scan(f, init, xs, length=length)
+
+        def vmap(self, fn, in_axes=0, out_axes=0):
+            if isinstance(in_axes, list):
+                in_axes = tuple(in_axes)
+            return _jax.vmap(fn, in_axes=in_axes, out_axes=out_axes)
 
         def argsort_stable(self, arr, axis: int = -1):
             return jnp.argsort(arr, axis=axis, stable=True)

@@ -21,7 +21,12 @@ This module batches that work at two levels:
   instead of once per *cell*, and the results stay bit-identical to
   per-cell ``simulate_fast`` runs (``tests/test_lockstep.py``;
   speedup gate in ``benchmarks/run.py lockstep``).
-* ``simulate_batch`` — runs a (specs x seeds x traces) grid: one
+* ``simulate_batch`` — runs a (specs x seeds x traces) grid.  On the
+  jax backend the grid is **grid-fused**: specs are bucketed by static
+  shape key (:func:`grid_plan`), scalar parameters are stacked into
+  spec-axis arrays, and each bucket runs as ONE ``vmap``-wrapped
+  jitted ``lax.scan`` — a whole parameter sweep pays one compilation
+  per shape bucket.  Elsewhere (and for unstageable specs) it runs one
   lockstep batch per spec.  Schemes whose load-only stepping ignores
   the coefficient seed (``seed_sensitive = False``, all paper schemes)
   run the trace axis ONCE and broadcast the results across the seed
@@ -36,7 +41,9 @@ tolerance.
 
 from __future__ import annotations
 
-from dataclasses import dataclass
+import os
+import warnings
+from dataclasses import dataclass, field
 
 import numpy as np
 
@@ -67,6 +74,9 @@ __all__ = [
     "simulate_lockstep",
     "simulate_batch",
     "select_parameters_fast",
+    "grid_plan",
+    "cache_stats",
+    "clear_runner_cache",
 ]
 
 
@@ -414,21 +424,81 @@ def _assemble_results(
     return results
 
 
-# staged-scan runners, one per (scheme, params, n, J, waitout[, seed])
-# spec: reused across simulate_lockstep calls so recompilation is paid
-# once per spec, not once per call (the ``lockstep-jax`` bench gates
-# this).  The seed enters the key only for seed-sensitive schemes —
-# load-only stepping never reads the code coefficients otherwise.
-# The registered factory/kernel OBJECTS are part of the key (hashed by
-# identity, and the key reference keeps them alive so a freed address
-# can never be recycled into a colliding id), so re-registering a
-# scheme or kernel — the extension API's register/unregister pattern —
-# never hits a stale compiled runner or a stale "unsupported" verdict;
-# the cache is capped FIFO so long parameter sweeps cannot hold every
-# compiled executable for the process lifetime.
+# staged-scan runners: per-SPEC runners (one jitted scan per
+# (scheme, params, n, J, waitout[, seed]) spec, ``simulate_lockstep``)
+# and per-BUCKET grid runners (one vmapped scan per shape bucket of a
+# fused ``simulate_batch`` sweep) share one FIFO cache, so
+# recompilation is paid once per spec / bucket, not once per call (the
+# ``lockstep-jax`` and ``grid-jax`` benches gate this).  The seed
+# enters keys only for seed-sensitive schemes — load-only stepping
+# never reads the code coefficients otherwise.  The registered
+# factory/kernel OBJECTS are part of every key (hashed by identity,
+# and the key reference keeps them alive so a freed address can never
+# be recycled into a colliding id), so re-registering a scheme or
+# kernel — the extension API's register/unregister pattern — never
+# hits a stale compiled runner or a stale "unsupported" verdict; the
+# FIFO cap (``REPRO_RUNNER_CACHE_CAP``, default 256) keeps long
+# parameter sweeps from holding every compiled executable for the
+# process lifetime.
 _JAX_RUNNERS: dict[tuple, object] = {}
-_JAX_RUNNERS_MAX = 256
+_RUNNER_CACHE_CAP_DEFAULT = 256
 _JAX_UNSUPPORTED = object()
+_CACHE_COUNTERS = {"hits": 0, "misses": 0, "evictions": 0, "compiles": 0}
+
+
+def _runner_cache_cap() -> int:
+    """FIFO cap on cached compiled runners; configurable per process
+    via the ``REPRO_RUNNER_CACHE_CAP`` environment variable (read at
+    lookup time, so tests and long-lived services can retune it)."""
+    raw = os.environ.get("REPRO_RUNNER_CACHE_CAP", "").strip()
+    if raw:
+        try:
+            return max(1, int(raw))
+        except ValueError:
+            warnings.warn(
+                f"REPRO_RUNNER_CACHE_CAP={raw!r} is not an int; using "
+                f"{_RUNNER_CACHE_CAP_DEFAULT}",
+                stacklevel=2,
+            )
+    return _RUNNER_CACHE_CAP_DEFAULT
+
+
+def cache_stats() -> dict:
+    """Counters for the compiled-runner cache: ``hits`` / ``misses`` /
+    ``evictions`` plus ``compiles`` (cache misses that actually built
+    and staged a runner — "unsupported spec" verdicts are misses but
+    not compiles), and the current ``size`` / ``cap``.  The ``grid-jax``
+    bench asserts one compile per shape bucket off these."""
+    return dict(_CACHE_COUNTERS, size=len(_JAX_RUNNERS),
+                cap=_runner_cache_cap())
+
+
+def clear_runner_cache() -> None:
+    """Drop every cached runner and zero the :func:`cache_stats`
+    counters (benchmarks use this to measure cold-start compiles)."""
+    _JAX_RUNNERS.clear()
+    for k in _CACHE_COUNTERS:
+        _CACHE_COUNTERS[k] = 0
+
+
+def _runner_cache_lookup(key: tuple, build):
+    """FIFO-cached runner lookup; ``build()`` runs on a miss and may
+    return ``_JAX_UNSUPPORTED`` (cached too, so the verdict is not
+    re-derived every call)."""
+    entry = _JAX_RUNNERS.get(key)
+    if entry is not None:
+        _CACHE_COUNTERS["hits"] += 1
+        return entry
+    _CACHE_COUNTERS["misses"] += 1
+    entry = build()
+    if entry is not _JAX_UNSUPPORTED:
+        _CACHE_COUNTERS["compiles"] += 1
+    cap = _runner_cache_cap()
+    while len(_JAX_RUNNERS) >= cap:
+        _JAX_RUNNERS.pop(next(iter(_JAX_RUNNERS)))
+        _CACHE_COUNTERS["evictions"] += 1
+    _JAX_RUNNERS[key] = entry
+    return entry
 
 
 def _jax_runner_key(scheme, params: dict, J: int, waitout: str, seed: int):
@@ -440,6 +510,7 @@ def _jax_runner_key(scheme, params: dict, J: int, waitout: str, seed: int):
         or kernel_seed_sensitive(scheme.name)
     )
     return (
+        "spec",
         scheme.name,
         _SCHEME_FACTORIES.get(scheme.name),
         _KERNELS.get(scheme.name),
@@ -451,89 +522,164 @@ def _jax_runner_key(scheme, params: dict, J: int, waitout: str, seed: int):
     )
 
 
+def _stageable(kernel_or_none, gate_or_none, waitout: str) -> bool:
+    """Can the static-shape scan path express this spec?  Shared by the
+    per-spec runner builder and the grid-fusion planner (which must
+    route unstageable specs to the per-spec fallback BEFORE bucketing).
+    False when: no registered kernel, load-adaptive ``round_loads``
+    overrides (the timing precompute assumes one constant load), or —
+    in selective wait-out — gate members without the analytic
+    ``min_drops_batch`` solver.  Callers pass the gate they already
+    built for the spec (None only alongside a None kernel)."""
+    if kernel_or_none is None:
+        return False
+    if type(kernel_or_none).round_loads is not SchemeKernel.round_loads:
+        return False
+    if waitout == "selective":
+        return gate_or_none.analytic
+    return True
+
+
+def _staged_lockstep_run(kernel, gate, rounds: int, selective: bool,
+                         traces_dev, mu, alpha, load):
+    """One spec's whole (cells x rounds) lockstep sweep as a ``scan``
+    over the rounds axis — the pure traced core shared by the per-spec
+    jitted runner and the grid-fused (vmapped) bucket runner.  ``mu``,
+    ``alpha`` and ``load`` are traced scalars (per-spec lanes of the
+    stacked arrays under ``vmap``)."""
+    import jax.numpy as jnp
+
+    bkj = kernel.bk
+    inv_n = 1.0 / kernel.n
+    cells = traces_dev.shape[0]
+    extra = (load - inv_n) * alpha
+    times_all = traces_dev + extra                  # (cells, rounds, n)
+    cls, flat0 = state_flatten(kernel.init_state(cells))
+    gs0 = gate.init_state(cells)
+
+    def body(carry, xs):
+        flat, bufs, alive = carry
+        t, times = xs
+        state = state_unflatten(cls, list(flat))
+        # identical expressions to the numpy engine, one round at
+        # a time under the scan
+        kappa = times.min(axis=1)
+        cutoff = (1.0 + mu) * kappa
+        tmax = times.max(axis=1)
+        cand = times > cutoff[:, None]
+        any_cand = cand.any(axis=1)
+        base = jnp.minimum(cutoff, tmax)
+        gs = GateState(bufs=list(bufs), alive=alive,
+                       filled=gate.full, history=None)
+        if selective:
+            gs, eff, waited = gate.admit_partial(
+                gs, cand, times, any_cand
+            )
+            waited_any = waited.any(axis=1)
+            wmax = jnp.where(waited, times, -jnp.inf).max(axis=1)
+            dur_w = jnp.maximum(
+                wmax, jnp.where(eff.any(axis=1), base, cutoff)
+            )
+            duration = jnp.where(waited_any, dur_w, base)
+            wflag = waited_any
+        else:
+            gs, eff, ok_any = gate.admit_all(gs, cand, any_cand)
+            wflag = any_cand & ~ok_any
+            duration = jnp.where(wflag, tmax, base)
+        state = kernel.step(state, t, eff)
+        _, flat = state_flatten(state)
+        return (
+            (tuple(flat), tuple(gs.bufs), gs.alive),
+            (duration, eff, wflag),
+        )
+
+    ts = jnp.arange(1, rounds + 1)
+    xs = (ts, jnp.swapaxes(times_all, 0, 1))
+    (flat_f, _, _), (dur, eff, wflag) = bkj.scan(
+        body, (tuple(flat0), tuple(gs0.bufs), gs0.alive), xs
+    )
+    state = state_unflatten(cls, list(flat_f))
+    return dict(
+        rt=jnp.swapaxes(dur, 0, 1),
+        done_round=state.done_round,
+        dead=state.dead,
+        waitouts=wflag.sum(axis=0),
+        history=eff,
+    )
+
+
 def _build_jax_runner(scheme, J: int, waitout: str):
     """Stage one spec's whole lockstep sweep as a jitted ``lax.scan``.
 
     Returns ``_JAX_UNSUPPORTED`` for specs the static-shape path cannot
-    express: no registered kernel, load-adaptive ``round_loads``
-    overrides (the timing precompute assumes one constant load), or —
-    in selective wait-out — gate members without the analytic
-    ``min_drops_batch`` solver.
+    express (see :func:`_stageable`).
     """
-    import jax.numpy as jnp
-
     bkj = get_backend("jax")
     try:
         kernel = make_kernel(scheme, bkj)
     except KeyError:
-        return _JAX_UNSUPPORTED
-    if type(kernel).round_loads is not SchemeKernel.round_loads:
-        return _JAX_UNSUPPORTED
-    gate = GateKernel(scheme.design_model, scheme.n, bkj)
-    if waitout == "selective" and not gate.analytic:
+        kernel = None
+    gate = (
+        GateKernel(scheme.design_model, scheme.n, bkj)
+        if kernel is not None else None
+    )
+    if not _stageable(kernel, gate, waitout):
         return _JAX_UNSUPPORTED
     rounds = J + kernel.T
-    inv_n = 1.0 / kernel.n
     selective = waitout == "selective"
 
     def run(traces_dev, mu, alpha, load):
-        cells = traces_dev.shape[0]
-        extra = (load - inv_n) * alpha
-        times_all = traces_dev + extra              # (cells, rounds, n)
-        cls, flat0 = state_flatten(kernel.init_state(cells))
-        gs0 = gate.init_state(cells)
-
-        def body(carry, xs):
-            flat, bufs, alive = carry
-            t, times = xs
-            state = state_unflatten(cls, list(flat))
-            # identical expressions to the numpy engine, one round at
-            # a time under the scan
-            kappa = times.min(axis=1)
-            cutoff = (1.0 + mu) * kappa
-            tmax = times.max(axis=1)
-            cand = times > cutoff[:, None]
-            any_cand = cand.any(axis=1)
-            base = jnp.minimum(cutoff, tmax)
-            gs = GateState(bufs=list(bufs), alive=alive,
-                           filled=gate.full, history=None)
-            if selective:
-                gs, eff, waited = gate.admit_partial(
-                    gs, cand, times, any_cand
-                )
-                waited_any = waited.any(axis=1)
-                wmax = jnp.where(waited, times, -jnp.inf).max(axis=1)
-                dur_w = jnp.maximum(
-                    wmax, jnp.where(eff.any(axis=1), base, cutoff)
-                )
-                duration = jnp.where(waited_any, dur_w, base)
-                wflag = waited_any
-            else:
-                gs, eff, ok_any = gate.admit_all(gs, cand, any_cand)
-                wflag = any_cand & ~ok_any
-                duration = jnp.where(wflag, tmax, base)
-            state = kernel.step(state, t, eff)
-            _, flat = state_flatten(state)
-            return (
-                (tuple(flat), tuple(gs.bufs), gs.alive),
-                (duration, eff, wflag),
-            )
-
-        ts = jnp.arange(1, rounds + 1)
-        xs = (ts, jnp.swapaxes(times_all, 0, 1))
-        (flat_f, _, _), (dur, eff, wflag) = bkj.scan(
-            body, (tuple(flat0), tuple(gs0.bufs), gs0.alive), xs
-        )
-        state = state_unflatten(cls, list(flat_f))
-        return dict(
-            rt=jnp.swapaxes(dur, 0, 1),
-            done_round=state.done_round,
-            dead=state.dead,
-            waitouts=wflag.sum(axis=0),
-            history=eff,
+        return _staged_lockstep_run(
+            kernel, gate, rounds, selective, traces_dev, mu, alpha, load
         )
 
     return bkj.jit(run), kernel.name
+
+
+def _build_jax_grid_runner(scheme, J: int, waitout: str,
+                           fused_names: tuple):
+    """Stage one shape BUCKET — many specs sharing every static shape —
+    as a single ``vmap``-wrapped jitted ``lax.scan``.
+
+    The per-spec scalars (``mu``, ``alpha``, ``load`` and the kernel's
+    ``fused_params``) arrive stacked along a leading spec axis; each
+    vmap lane rebinds them as traced scalars onto shallow copies of the
+    representative kernel / design model (``SchemeKernel.bind_fused``),
+    so the whole bucket compiles ONCE and transfers to the host once.
+    The traces are shared across lanes (``in_axes=None``) — every spec
+    of a ``simulate_batch`` call replays the same trace set.
+    """
+    bkj = get_backend("jax")
+    try:
+        kernel0 = make_kernel(scheme, bkj)
+    except KeyError:
+        kernel0 = None
+    gate0 = (
+        GateKernel(scheme.design_model, scheme.n, bkj)
+        if kernel0 is not None else None
+    )
+    if not _stageable(kernel0, gate0, waitout):
+        return _JAX_UNSUPPORTED
+    rounds = J + kernel0.T
+    selective = waitout == "selective"
+    n = kernel0.n
+
+    def run_one(mu, alpha, load, fused, traces_dev):
+        if fused_names:
+            kernel, model = kernel0.bind_fused(fused)
+            gate = GateKernel(model, n, bkj)
+        else:
+            kernel, gate = kernel0, gate0
+        return _staged_lockstep_run(
+            kernel, gate, rounds, selective, traces_dev, mu, alpha, load
+        )
+
+    def run(mu, alpha, load, fused, traces_dev):
+        return bkj.vmap(run_one, in_axes=(0, 0, 0, 0, None))(
+            mu, alpha, load, fused, traces_dev
+        )
+
+    return bkj.jit(run), kernel0.name
 
 
 def _simulate_lockstep_jax(
@@ -562,12 +708,9 @@ def _simulate_lockstep_jax(
 
     key = _jax_runner_key(scheme, params, J, waitout, seed)
     with enable_x64():
-        entry = _JAX_RUNNERS.get(key)
-        if entry is None:
-            entry = _build_jax_runner(scheme, J, waitout)
-            while len(_JAX_RUNNERS) >= _JAX_RUNNERS_MAX:
-                _JAX_RUNNERS.pop(next(iter(_JAX_RUNNERS)))
-            _JAX_RUNNERS[key] = entry
+        entry = _runner_cache_lookup(
+            key, lambda: _build_jax_runner(scheme, J, waitout)
+        )
         if entry is _JAX_UNSUPPORTED:
             return None
         runner, kernel_name = entry
@@ -588,6 +731,262 @@ def _simulate_lockstep_jax(
     )
 
 
+@dataclass(frozen=True)
+class _RunEntry:
+    """One (spec, seed) run of a ``simulate_batch`` grid after seed
+    deduplication (insensitive schemes keep only ``ki == 0``; the
+    result row is broadcast across the seed axis afterwards)."""
+
+    si: int
+    ki: int
+    name: str
+    params: dict
+    J: int
+    seed: int
+
+
+@dataclass
+class _Bucket:
+    """One grid-fusion shape bucket: specs sharing every static shape
+    (scheme structure, n, J, T, waitout, trace count), differing only
+    in stacked scalars."""
+
+    key: tuple
+    J: int
+    T: int
+    fused_names: tuple
+    scheme0: object                      # representative prototype
+    members: list = field(default_factory=list)  # (entry, scheme, scalars)
+
+
+def _plan_entries(specs, traces, seeds, J, strict, out):
+    """Per-spec prototypes -> fitted J, seed dedup, run entries.
+
+    Infeasible specs (constructor rejects the grid) raise under
+    ``strict`` and mark their ``out`` rows ``None`` otherwise.  Returns
+    ``(entries, sensitive)`` where ``sensitive[si]`` drives the
+    seed-axis broadcast.
+    """
+    num_traces, rounds_avail, n = traces.shape
+    entries: list[_RunEntry] = []
+    sensitive_map: dict[int, bool] = {}
+    for si, (name, params) in enumerate(specs):
+        # one prototype per spec: J, T and normalized_load depend only
+        # on the parameters, not on seed or trace.  Probe at the trace
+        # length — an upper bound on any fitted J — so registered
+        # schemes that validate J accept it.
+        try:
+            probe = make_scheme(name, n, rounds_avail, seed=seeds[0],
+                                **dict(params))
+            J_eff = _grid_J(rounds_avail, probe.T, J, f"{name} {params}")
+        except ValueError:
+            if strict:
+                raise
+            out[si] = None
+            continue
+        sensitive = (
+            getattr(probe, "seed_sensitive", False)
+            or kernel_seed_sensitive(probe.name)
+        )
+        sensitive_map[si] = sensitive
+        run_seeds = seeds if sensitive else seeds[:1]
+        for ki, seed in enumerate(run_seeds):
+            entries.append(
+                _RunEntry(si, ki, name, dict(params), J_eff, seed)
+            )
+    return entries, sensitive_map
+
+
+def _plan_buckets(entries, traces_shape, waitout, strict, out):
+    """Group stageable run entries into shape buckets (the grid-fusion
+    planner).  Entries the fused path cannot express — kernel-less
+    schemes, load-adaptive loads, non-analytic gates — come back as
+    leftovers for the transparent per-spec fallback; entries whose
+    constructor rejects the fitted J mark their rows (strict raises).
+
+    The bucket key is the spec's full STATIC signature: scheme name +
+    registered factory/kernel identity, the non-fused ("structural")
+    parameters, n, J, T, waitout, the trace count, and — for
+    seed-sensitive schemes — the seed (mirroring the per-spec runner
+    cache).  The kernel's ``fused_params`` values are excluded: they
+    stack into per-bucket spec-axis arrays instead.
+    """
+    from .kernel import _KERNELS
+    from .schemes import _SCHEME_FACTORIES
+
+    num_traces, rounds_avail, n = traces_shape
+    nbk = get_backend("numpy")
+    leftover: list[_RunEntry] = []
+    buckets: dict[tuple, _Bucket] = {}
+    for e in entries:
+        if not has_kernel(e.name):
+            leftover.append(e)
+            continue
+        try:
+            scheme = make_scheme(e.name, n, e.J, seed=e.seed,
+                                 **dict(e.params))
+        except ValueError:
+            if strict:
+                raise
+            out[e.si, e.ki] = [None] * num_traces
+            continue
+        try:
+            kern = make_kernel(scheme, nbk)
+        except KeyError:  # pragma: no cover - has_kernel raced a dereg
+            leftover.append(e)
+            continue
+        gate = (
+            GateKernel(scheme.design_model, scheme.n, nbk)
+            if waitout == "selective" else None
+        )
+        if not _stageable(kern, gate, waitout):
+            leftover.append(e)
+            continue
+        fused_names = tuple(kern.fused_params)
+        sensitive = (
+            getattr(scheme, "seed_sensitive", False)
+            or kernel_seed_sensitive(scheme.name)
+        )
+        structural = tuple(sorted(
+            (str(k), v) for k, v in e.params.items()
+            if k not in fused_names
+        ))
+        key = (
+            "grid",
+            scheme.name,
+            _SCHEME_FACTORIES.get(scheme.name),
+            _KERNELS.get(scheme.name),
+            structural,
+            fused_names,
+            n,
+            e.J,
+            kern.T,
+            waitout,
+            num_traces,
+            e.seed if sensitive else None,
+        )
+        bucket = buckets.get(key)
+        if bucket is None:
+            bucket = buckets[key] = _Bucket(
+                key, e.J, kern.T, fused_names, scheme
+            )
+        bucket.members.append((e, scheme, kern.fused_scalars(scheme)))
+    return leftover, list(buckets.values())
+
+
+def _simulate_batch_fused(entries, traces, out, *, mu, alpha, waitout,
+                          strict):
+    """Run the stageable entries of a grid bucket-by-bucket: one
+    ``vmap``-wrapped jitted scan and ONE device->host transfer per
+    shape bucket.  Returns the entries left for the per-spec path."""
+    import jax
+    import jax.numpy as jnp
+    from jax.experimental import enable_x64
+
+    leftover, buckets = _plan_buckets(
+        entries, traces.shape, waitout, strict, out
+    )
+    if not buckets:
+        return leftover
+    with enable_x64():
+        for b in buckets:
+            entry = _runner_cache_lookup(
+                b.key,
+                lambda b=b: _build_jax_grid_runner(
+                    b.scheme0, b.J, waitout, b.fused_names
+                ),
+            )
+            if entry is _JAX_UNSUPPORTED:  # pragma: no cover - planner
+                leftover.extend(e for e, _, _ in b.members)  # pre-checks
+                continue
+            runner, kernel_name = entry
+            rounds = b.J + b.T
+            S = len(b.members)
+            mu_s = jnp.full((S,), float(mu), dtype=jnp.float64)
+            alpha_s = jnp.full((S,), float(alpha), dtype=jnp.float64)
+            load_s = jnp.asarray(
+                [s.normalized_load for _, s, _ in b.members],
+                dtype=jnp.float64,
+            )
+            fused = {
+                name: jnp.asarray([sc[name] for _, _, sc in b.members])
+                for name in b.fused_names
+            }
+            res = runner(mu_s, alpha_s, load_s, fused, traces[:, :rounds])
+            host = jax.device_get(res)
+            for i, (e, scheme, _) in enumerate(b.members):
+                out[e.si, e.ki] = _assemble_results(
+                    kernel_name, scheme.normalized_load, b.J,
+                    np.asarray(host["rt"][i], dtype=np.float64),
+                    np.asarray(host["done_round"][i]),
+                    np.asarray(host["dead"][i]),
+                    np.asarray(host["waitouts"][i]),
+                    np.asarray(host["history"][i]),
+                    strict, None,
+                )
+    return leftover
+
+
+def _fuse_enabled(fuse: bool | None) -> bool:
+    """Grid fusion defaults ON for the jax backend; disable per call
+    (``fuse=False``) or per process (``REPRO_GRID_FUSE=0``)."""
+    if fuse is not None:
+        return fuse
+    raw = os.environ.get("REPRO_GRID_FUSE", "1").strip().lower()
+    return raw not in ("0", "false", "off", "no")
+
+
+def grid_plan(
+    specs: list[tuple[str, dict]],
+    traces: np.ndarray,
+    *,
+    seeds: tuple[int, ...] = (0,),
+    J: int | None = None,
+    waitout: str = "selective",
+) -> dict:
+    """Dry-run the grid-fusion planner: how would ``simulate_batch``
+    bucket these specs on the jax backend?
+
+    Returns ``{"buckets": [...], "fallback": [...], "infeasible":
+    [...]}`` — every input spec index lands in exactly one of the
+    three: a bucket dict (scheme name, member spec indices, the shared
+    ``J``/``T``, the fused stacked-scalar parameter names), the
+    per-spec ``fallback`` list (stageability blockers), or
+    ``infeasible`` (the constructor rejected the spec / grid outright
+    — ``strict=False`` None rows).  Purely host-side — works without
+    jax installed — so CLIs and benchmarks can report expected compile
+    counts up front.
+    """
+    traces = np.asarray(traces, dtype=np.float64)
+    if traces.ndim == 2:
+        traces = traces[None]
+    out = np.empty((len(specs), len(seeds), traces.shape[0]), dtype=object)
+    entries, _ = _plan_entries(specs, traces, seeds, J, False, out)
+    leftover, buckets = _plan_buckets(
+        entries, traces.shape, waitout, False, out
+    )
+    accounted = {e.si for e in leftover}
+    for b in buckets:
+        accounted.update(e.si for e, _, _ in b.members)
+    return {
+        "buckets": [
+            {
+                "scheme": b.scheme0.name,
+                "specs": [e.si for e, _, _ in b.members],
+                "J": b.J,
+                "T": b.T,
+                "fused": list(b.fused_names),
+                "cells": traces.shape[0],
+            }
+            for b in buckets
+        ],
+        # dedupe: seed-sensitive specs contribute one run entry per
+        # seed, but the plan reports spec indices
+        "fallback": sorted({e.si for e in leftover}),
+        "infeasible": sorted(set(range(len(specs))) - accounted),
+    }
+
+
 def simulate_batch(
     specs: list[tuple[str, dict]],
     traces: np.ndarray,
@@ -599,6 +998,7 @@ def simulate_batch(
     waitout: str = "selective",
     strict: bool = True,
     backend: str | None = None,
+    fuse: bool | None = None,
 ) -> np.ndarray:
     """Run a (specs x seeds x traces) grid on the lockstep engine.
 
@@ -609,7 +1009,20 @@ def simulate_batch(
     infeasible cells (bad params / wait-out contract violations) hold
     ``None`` instead of raising.
 
-    Each spec advances all of its traces in lockstep
+    On the **jax** backend the grid runs **grid-fused** by default:
+    specs are bucketed by static shape key (scheme structure, n, J, T,
+    wait-out mode, trace count — see :func:`grid_plan`), their scalar
+    parameters (``mu``, ``alpha``, load, the kernels' ``fused_params``)
+    are stacked into leading spec-axis arrays, and each bucket runs as
+    ONE ``vmap``-wrapped jitted ``lax.scan`` with a single device->host
+    transfer — a whole parameter sweep pays one compilation per shape
+    bucket instead of one per spec (``benchmarks/run.py grid-jax``
+    gates this).  ``fuse=False`` (or ``REPRO_GRID_FUSE=0``) restores
+    the per-spec runners; specs the fused path cannot stage fall back
+    to them transparently, with identical results either way (exact
+    bool/int bookkeeping, allclose floats — ``tests/test_grid_fused.py``).
+
+    Otherwise each spec advances all of its traces in lockstep
     (:func:`simulate_lockstep`); ragged grids are fine — every spec
     gets its own ``J``/``T`` (the App-J fit-the-trace rule) and state
     shapes.  ``seeds`` vary only the schemes' gradient-code
@@ -633,56 +1046,51 @@ def simulate_batch(
     num_traces, rounds_avail, n = traces.shape
 
     out = np.empty((len(specs), len(seeds), num_traces), dtype=object)
-    for si, (name, params) in enumerate(specs):
-        # one prototype per spec: J, T and normalized_load depend only
-        # on the parameters, not on seed or trace.  Probe at the trace
-        # length — an upper bound on any fitted J — so registered
-        # schemes that validate J accept it.
-        try:
-            probe = make_scheme(name, n, rounds_avail, seed=seeds[0],
-                                **dict(params))
-            J_eff = _grid_J(rounds_avail, probe.T, J, f"{name} {params}")
-        except ValueError:
-            if strict:
-                raise
-            out[si] = None
-            continue
-        sensitive = (
-            getattr(probe, "seed_sensitive", False)
-            or kernel_seed_sensitive(probe.name)
+    entries, sensitive_map = _plan_entries(
+        specs, traces, seeds, J, strict, out
+    )
+    bk_name = backend if backend is not None else get_backend().name
+    if (
+        bk_name == "jax"
+        and "jax" in available_backends()
+        and _fuse_enabled(fuse)
+    ):
+        entries = _simulate_batch_fused(
+            entries, traces, out, mu=mu, alpha=alpha, waitout=waitout,
+            strict=strict,
         )
-        run_seeds = seeds if sensitive else seeds[:1]
-        for ki, seed in enumerate(run_seeds):
-            if has_kernel(probe.name):
-                # contract violations already yield None cells under
-                # strict=False; ValueError covers constructors that
-                # reject the fitted J_eff (the probe ran at trace
-                # length, an upper bound)
+    for e in entries:
+        if has_kernel(e.name):
+            # contract violations already yield None cells under
+            # strict=False; ValueError covers constructors that
+            # reject the fitted J_eff (the probe ran at trace
+            # length, an upper bound)
+            try:
+                row = simulate_lockstep(
+                    e.name, e.params, traces, mu=mu, alpha=alpha, J=e.J,
+                    waitout=waitout, seed=e.seed, strict=strict,
+                    backend=backend,
+                )
+            except ValueError:
+                if strict:
+                    raise
+                row = [None] * num_traces
+        else:
+            row = []
+            for ti in range(num_traces):
                 try:
-                    row = simulate_lockstep(
-                        name, params, traces, mu=mu, alpha=alpha, J=J_eff,
-                        waitout=waitout, seed=seed, strict=strict,
-                        backend=backend,
-                    )
-                except ValueError:
+                    scheme = make_scheme(e.name, n, e.J, seed=e.seed,
+                                         **dict(e.params))
+                    row.append(simulate_fast(
+                        scheme, traces[ti], mu=mu, alpha=alpha,
+                        J=e.J, waitout=waitout,
+                    ))
+                except (ValueError, AssertionError):
                     if strict:
                         raise
-                    row = [None] * num_traces
-            else:
-                row = []
-                for ti in range(num_traces):
-                    try:
-                        scheme = make_scheme(name, n, J_eff, seed=seed,
-                                             **dict(params))
-                        row.append(simulate_fast(
-                            scheme, traces[ti], mu=mu, alpha=alpha,
-                            J=J_eff, waitout=waitout,
-                        ))
-                    except (ValueError, AssertionError):
-                        if strict:
-                            raise
-                        row.append(None)
-            out[si, ki] = row
+                    row.append(None)
+        out[e.si, e.ki] = row
+    for si, sensitive in sensitive_map.items():
         if not sensitive:
             # load-only results are seed-invariant: broadcast the
             # SimResult objects (shared, treat as read-only)

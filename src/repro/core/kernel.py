@@ -38,13 +38,20 @@ admission is one ``suffix_ok_batch`` array check per member per round.
 
 from __future__ import annotations
 
+import copy
 import dataclasses
 from dataclasses import dataclass, field
 
 import numpy as np
 
 from .backend import Backend, get_backend
-from .straggler import MixtureModel, StragglerModel, WindowwiseOr
+from .gc import GradientCode
+from .straggler import (
+    MixtureModel,
+    PerRoundModel,
+    StragglerModel,
+    WindowwiseOr,
+)
 
 __all__ = [
     "SchemeState",
@@ -78,6 +85,19 @@ def state_unflatten(cls, values):
     return cls(**{
         f.name: v for f, v in zip(dataclasses.fields(cls), values)
     })
+
+
+def _rebind_scalars(obj, **fields):
+    """Shallow copy of a kernel / straggler model / gradient code with
+    the given scalar attributes replaced, bypassing ``__init__`` and
+    ``__post_init__`` — the replacement values may be jax tracers (the
+    grid-fused engine's per-spec parameters), which concrete validation
+    like ``if lam < 0`` could not branch on.  Works for frozen
+    dataclasses and plain classes alike."""
+    new = copy.copy(obj)
+    for name, value in fields.items():
+        object.__setattr__(new, name, value)
+    return new
 
 
 # ---------------------------------------------------------------------------
@@ -162,6 +182,17 @@ class SchemeKernel:
     J: int
     T: int
     normalized_load: float
+    #: Scheme-constructor parameters the staged path consumes ONLY as
+    #: scalar values — never as array shapes, ring sizes, loop bounds,
+    #: or Python-level branches.  Specs differing solely in these (plus
+    #: mu / alpha / normalized load) share one grid-fused compilation
+    #: (``core.batch``): their values are stacked along a spec axis and
+    #: arrive in ``step`` as traced scalars via :meth:`bind_fused`.
+    #: Instances may narrow this per configuration (e.g. GC only fuses
+    #: ``s`` for the general code — GC-Rep's replication-group reshape
+    #: makes ``s`` structural).  Everything NOT listed here lands in
+    #: the planner's bucket shape key.
+    fused_params: tuple = ()
 
     def __init__(self, scheme, backend: Backend | None = None):
         self.bk = backend or get_backend()
@@ -190,6 +221,21 @@ class SchemeKernel:
         variants can vary it without touching the engine.
         """
         return self.bk.xp.full(state.cells, self.normalized_load)
+
+    def fused_scalars(self, scheme) -> dict:
+        """Read this kernel's :attr:`fused_params` values off a spec's
+        prototype — what the grid-fusion planner stacks into the
+        per-bucket spec-axis arrays."""
+        return {p: getattr(scheme, p) for p in self.fused_params}
+
+    def bind_fused(self, scalars: dict):
+        """Rebind the fused per-spec scalars (possibly traced, inside a
+        ``vmap``) onto shallow copies of the kernel and its design
+        model; returns ``(kernel, design_model)``.  The default covers
+        kernels with no fused parameters.  Overrides must keep every
+        derived quantity consistent (e.g. SR-SGC re-derives ``s`` from
+        the traced ``lam``) and must not mutate ``self``."""
+        return self, self.design_model
 
     def _base_arrays(self, cells: int) -> dict:
         xp = self.bk.xp
@@ -253,6 +299,21 @@ class GCKernel(SchemeKernel):
     def __init__(self, scheme, backend: Backend | None = None):
         super().__init__(scheme, backend)
         self.code = scheme.code
+        # the general code's decode test and the per-round design model
+        # consume `s` only as a threshold, so GC parameter sweeps fuse
+        # into one compilation; GC-Rep's replication-group reshape (and
+        # its coverage model) make `s` structural instead
+        if isinstance(scheme.design_model, PerRoundModel) and isinstance(
+            scheme.code, GradientCode
+        ):
+            self.fused_params = ("s",)
+
+    def bind_fused(self, scalars: dict):
+        if "s" not in scalars:
+            return self, self.design_model
+        s = scalars["s"]
+        kernel = _rebind_scalars(self, code=_rebind_scalars(self.code, s=s))
+        return kernel, _rebind_scalars(self.design_model, s=s)
 
     def init_state(self, cells: int) -> GCState:
         return GCState(**self._base_arrays(cells))
@@ -277,10 +338,36 @@ class SRSGCKernel(SchemeKernel):
 
     def __init__(self, scheme, backend: Backend | None = None):
         super().__init__(scheme, backend)
-        self.B, self.s = scheme.B, scheme.s
+        self.B, self.W, self.s = scheme.B, scheme.W, scheme.s
         self.code = scheme.code
         self.rep = scheme._groups is not None
         self.num_groups = scheme.code.num_groups if self.rep else 0
+        # with the general code, `lam` (and the derived `s`) enter only
+        # as thresholds — retry budget, decode count, gate limits — so
+        # lam sweeps at fixed (B, W) grid-fuse; the Rep refinement's
+        # group layout pins them structurally
+        if not self.rep and isinstance(scheme.code, GradientCode):
+            self.fused_params = ("lam",)
+
+    def bind_fused(self, scalars: dict):
+        if "lam" not in scalars:
+            return self, self.design_model
+        lam = scalars["lam"]
+        # s = ceil(B * lam / (W - 1 + B)), in traced-safe integer form
+        d = self.W - 1 + self.B
+        s = (self.B * lam + d - 1) // d
+        kernel = _rebind_scalars(
+            self, s=s, code=_rebind_scalars(self.code, s=s)
+        )
+        bursty, per_round = self.design_model.members
+        model = _rebind_scalars(
+            self.design_model,
+            members=(
+                _rebind_scalars(bursty, lam=lam),
+                _rebind_scalars(per_round, s=s),
+            ),
+        )
+        return kernel, model
 
     def init_state(self, cells: int) -> SRSGCState:
         xp = self.bk.xp
@@ -410,6 +497,26 @@ class MSGCKernel(SchemeKernel):
         self.B, self.W, self.lam = scheme.B, scheme.W, scheme.lam
         self.slots = scheme.slots  # == T + 1: ring size
         self.has_d2 = scheme.lam < scheme.n
+        # the kernel never touches the code object — `lam` enters only
+        # as the D2 decode threshold (n - lam) and the design models'
+        # count limits, so lam sweeps at fixed (B, W) grid-fuse; the
+        # lam == n degenerate drops the d2 buffers (a shape change)
+        if self.has_d2:
+            self.fused_params = ("lam",)
+
+    def bind_fused(self, scalars: dict):
+        if "lam" not in scalars:
+            return self, self.design_model
+        lam = scalars["lam"]
+        bursty, arb = self.design_model.members
+        model = _rebind_scalars(
+            self.design_model,
+            members=(
+                _rebind_scalars(bursty, lam=lam),
+                _rebind_scalars(arb, lam=lam),
+            ),
+        )
+        return _rebind_scalars(self, lam=lam), model
 
     def init_state(self, cells: int) -> MSGCState:
         xp = self.bk.xp

@@ -141,3 +141,33 @@ def test_xp_of_dispatch():
     if "jax" in available_backends():
         bk = get_backend("jax")
         assert xp_of(bk.xp.zeros(3)) is bk.xp
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_vmap_hook(backend):
+    """The vmap hook maps a pytree-returning fn over a leading batch
+    axis, with per-arg in_axes (None = broadcast) — the numpy
+    Python-loop fallback must match jax.vmap semantics."""
+    bk = get_backend(backend)
+    xp = bk.xp
+    A = np.arange(12.0).reshape(3, 4)
+    b = np.array([1.0, 2.0, 3.0])
+
+    def f(a, s, c):
+        return {"sum": a.sum() + s, "prod": a * c}
+
+    out = bk.vmap(f, in_axes=(0, 0, None))(
+        xp.asarray(A), xp.asarray(b), xp.asarray(2.0)
+    )
+    assert np.allclose(np.asarray(out["sum"]), A.sum(axis=1) + b)
+    assert np.allclose(np.asarray(out["prod"]), A * 2.0)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_vmap_hook_tuple_outputs(backend):
+    bk = get_backend(backend)
+    xp = bk.xp
+    A = np.arange(6.0).reshape(2, 3)
+    out = bk.vmap(lambda a: (a.min(), a + 1.0))(xp.asarray(A))
+    assert np.allclose(np.asarray(out[0]), A.min(axis=1))
+    assert np.allclose(np.asarray(out[1]), A + 1.0)

@@ -107,14 +107,46 @@ def test_jax_ragged_grid_and_strict_false():
 def test_jax_runner_cache_reuse():
     """Same spec key -> the staged runner is built once and reused
     across calls (what makes repeated Monte-Carlo waves cheap)."""
+    from repro.core import cache_stats
+
     n = 12
     traces = _traces(n, 16, 2, seed0=70)
     simulate_lockstep("gc", {"s": 3}, traces, alpha=6.0, J=16,
                       backend="jax")
     size = len(_JAX_RUNNERS)
+    hits = cache_stats()["hits"]
     simulate_lockstep("gc", {"s": 3}, _traces(n, 16, 2, seed0=80),
                       alpha=6.0, J=16, backend="jax")
     assert len(_JAX_RUNNERS) == size
+    assert cache_stats()["hits"] == hits + 1
+
+
+def test_runner_cache_cap_and_eviction(monkeypatch):
+    """The FIFO cap is configurable via REPRO_RUNNER_CACHE_CAP and
+    evictions / rebuilds show up on cache_stats()."""
+    from repro.core import cache_stats, clear_runner_cache
+
+    monkeypatch.setenv("REPRO_RUNNER_CACHE_CAP", "2")
+    clear_runner_cache()
+    n = 12
+    traces = _traces(n, 12, 1, seed0=90)
+    for J in (8, 10, 12):                # three distinct spec keys
+        simulate_lockstep("gc", {"s": 3}, traces, alpha=6.0, J=J,
+                          backend="jax")
+    st = cache_stats()
+    assert st["cap"] == 2 and st["size"] <= 2
+    assert st["misses"] == 3 and st["compiles"] == 3
+    assert st["evictions"] >= 1
+    # the most recent key survived the FIFO -> pure hit
+    simulate_lockstep("gc", {"s": 3}, traces, alpha=6.0, J=12,
+                      backend="jax")
+    assert cache_stats()["hits"] == st["hits"] + 1
+    # the oldest was evicted -> rebuilds (a new miss + compile)
+    simulate_lockstep("gc", {"s": 3}, traces, alpha=6.0, J=8,
+                      backend="jax")
+    st2 = cache_stats()
+    assert st2["misses"] == 4 and st2["compiles"] == 4
+    clear_runner_cache()
 
 
 def test_jax_runner_cache_invalidated_on_reregistration():
