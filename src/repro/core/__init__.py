@@ -66,11 +66,13 @@ from .bounds import (
 )
 from .gc import GradientCode, RepGradientCode, cyclic_support, make_gradient_code
 from .schemes import (
+    DCGCScheme,
     GCScheme,
     JobDecode,
     MSGCScheme,
     MiniTask,
     NoCodingScheme,
+    SBGCScheme,
     SRSGCScheme,
     make_scheme,
     register_scheme,
@@ -87,14 +89,20 @@ from .straggler import (
     ArbitraryModel,
     BurstyModel,
     ConformanceGate,
+    DynamicClusterModel,
     GilbertElliotSource,
+    LambdaTraceGenerator,
     MixtureModel,
     PerRoundModel,
     RepCoverageModel,
+    Scenario,
+    StochasticBlockModel,
+    TraceModel,
     TraceSource,
     WindowwiseOr,
     fit_gilbert_elliot,
     suggest_parameters,
+    trace_library,
 )
 
 __all__ = [
@@ -105,6 +113,8 @@ __all__ = [
     "GCScheme",
     "SRSGCScheme",
     "MSGCScheme",
+    "DCGCScheme",
+    "SBGCScheme",
     "NoCodingScheme",
     "MiniTask",
     "JobDecode",
@@ -115,9 +125,15 @@ __all__ = [
     "MixtureModel",
     "WindowwiseOr",
     "RepCoverageModel",
+    "DynamicClusterModel",
+    "StochasticBlockModel",
     "ConformanceGate",
     "GilbertElliotSource",
     "TraceSource",
+    "TraceModel",
+    "LambdaTraceGenerator",
+    "Scenario",
+    "trace_library",
     "fit_gilbert_elliot",
     "suggest_parameters",
     "load_gc",

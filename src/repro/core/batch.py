@@ -241,6 +241,13 @@ def simulate_lockstep(
     ``traces``: (cells, rounds, n).  ``J = None`` fits ``J + T`` inside
     the trace (the App-J rule).  With ``strict=False``, cells whose
     wait-out contract is violated yield ``None`` instead of raising.
+
+    ``alpha`` may be a scalar or a per-worker ``(n,)`` vector
+    (heterogeneous fleets, e.g. ``LambdaTraceGenerator.worker_alpha``):
+    worker i's round time is ``trace + (load_i - 1/n) * alpha[i]``,
+    with the per-cell loads still coming from the kernel's
+    ``round_loads`` protocol.  Identical broadcasting on every path
+    (scalar, numpy lockstep, jax scan, fused grid).
     """
     traces = np.asarray(traces, dtype=np.float64)
     if traces.ndim == 2:
@@ -310,8 +317,10 @@ def simulate_lockstep(
             times, kappa, cutoff = times_all[:, k], kappa_all[:, k], cutoff_all[:, k]
             tmax, cand, any_cand = tmax_all[:, k], cand_all[:, k], any_all[:, k]
         else:
-            extra = (kernel.round_loads(state, t) - inv_n) * alpha
-            times = traces[:, k, :] + extra[:, None]
+            # (cells, 1) loads x scalar-or-(n,) alpha: heterogeneous
+            # per-worker load slopes broadcast into a (cells, n) extra
+            extra = (kernel.round_loads(state, t) - inv_n)[:, None] * alpha
+            times = traces[:, k, :] + extra
             kappa = times.min(axis=1)
             cutoff = (1.0 + mu) * kappa
             tmax = times.max(axis=1)
@@ -443,6 +452,15 @@ def _assemble_results(
 _JAX_RUNNERS: dict[tuple, object] = {}
 _RUNNER_CACHE_CAP_DEFAULT = 256
 _JAX_UNSUPPORTED = object()
+#: "unsupported spec" verdicts live in a SIDE table: they are cheap
+#: host-side markers, so they must neither count toward the FIFO cap
+#: nor push hot *compiled* runners out of ``_JAX_RUNNERS`` (long mixed
+#: sweeps interleave many unstageable specs with a few compiled ones).
+#: Still FIFO-bounded (generously — re-deriving an evicted verdict is
+#: cheap, no compile) so unbounded spec churn in a long-lived process
+#: cannot grow memory without limit.
+_JAX_UNSUPPORTED_VERDICTS: dict[tuple, object] = {}
+_VERDICT_CACHE_CAP = 4096
 _CACHE_COUNTERS = {"hits": 0, "misses": 0, "evictions": 0, "compiles": 0}
 
 
@@ -467,32 +485,47 @@ def cache_stats() -> dict:
     """Counters for the compiled-runner cache: ``hits`` / ``misses`` /
     ``evictions`` plus ``compiles`` (cache misses that actually built
     and staged a runner — "unsupported spec" verdicts are misses but
-    not compiles), and the current ``size`` / ``cap``.  The ``grid-jax``
-    bench asserts one compile per shape bucket off these."""
+    not compiles), the current ``size`` / ``cap`` of the compiled-
+    runner FIFO, and ``unsupported`` — the cached verdict count, held
+    in a side table exempt from the cap.  The ``grid-jax`` bench
+    asserts one compile per shape bucket off these."""
     return dict(_CACHE_COUNTERS, size=len(_JAX_RUNNERS),
-                cap=_runner_cache_cap())
+                cap=_runner_cache_cap(),
+                unsupported=len(_JAX_UNSUPPORTED_VERDICTS))
 
 
 def clear_runner_cache() -> None:
-    """Drop every cached runner and zero the :func:`cache_stats`
-    counters (benchmarks use this to measure cold-start compiles)."""
+    """Drop every cached runner and verdict and zero the
+    :func:`cache_stats` counters (benchmarks use this to measure
+    cold-start compiles)."""
     _JAX_RUNNERS.clear()
+    _JAX_UNSUPPORTED_VERDICTS.clear()
     for k in _CACHE_COUNTERS:
         _CACHE_COUNTERS[k] = 0
 
 
 def _runner_cache_lookup(key: tuple, build):
     """FIFO-cached runner lookup; ``build()`` runs on a miss and may
-    return ``_JAX_UNSUPPORTED`` (cached too, so the verdict is not
-    re-derived every call)."""
+    return ``_JAX_UNSUPPORTED`` (cached too — in the cap-exempt side
+    table, so the verdict is neither re-derived every call nor able to
+    evict a hot compiled runner)."""
+    if key in _JAX_UNSUPPORTED_VERDICTS:
+        _CACHE_COUNTERS["hits"] += 1
+        return _JAX_UNSUPPORTED
     entry = _JAX_RUNNERS.get(key)
     if entry is not None:
         _CACHE_COUNTERS["hits"] += 1
         return entry
     _CACHE_COUNTERS["misses"] += 1
     entry = build()
-    if entry is not _JAX_UNSUPPORTED:
-        _CACHE_COUNTERS["compiles"] += 1
+    if entry is _JAX_UNSUPPORTED:
+        while len(_JAX_UNSUPPORTED_VERDICTS) >= _VERDICT_CACHE_CAP:
+            _JAX_UNSUPPORTED_VERDICTS.pop(
+                next(iter(_JAX_UNSUPPORTED_VERDICTS))
+            )
+        _JAX_UNSUPPORTED_VERDICTS[key] = entry
+        return entry
+    _CACHE_COUNTERS["compiles"] += 1
     cap = _runner_cache_cap()
     while len(_JAX_RUNNERS) >= cap:
         _JAX_RUNNERS.pop(next(iter(_JAX_RUNNERS)))
@@ -715,8 +748,11 @@ def _simulate_lockstep_jax(
             return None
         runner, kernel_name = entry
         rounds = J + scheme.T
+        # alpha may be a per-worker (n,) vector (heterogeneous load
+        # slopes); a 0-d array otherwise — jit re-stages per shape
         out = runner(
-            traces[:, :rounds], float(mu), float(alpha),
+            traces[:, :rounds], float(mu),
+            np.asarray(alpha, dtype=np.float64),
             float(scheme.normalized_load),
         )
         host = jax.device_get(out)
@@ -903,7 +939,13 @@ def _simulate_batch_fused(entries, traces, out, *, mu, alpha, waitout,
             rounds = b.J + b.T
             S = len(b.members)
             mu_s = jnp.full((S,), float(mu), dtype=jnp.float64)
-            alpha_s = jnp.full((S,), float(alpha), dtype=jnp.float64)
+            # scalar alpha stacks to (S,); a per-worker (n,) vector
+            # (heterogeneous load slopes) stacks to (S, n) — either
+            # way each vmap lane sees its own alpha
+            alpha_arr = np.asarray(alpha, dtype=np.float64)
+            alpha_s = jnp.broadcast_to(
+                jnp.asarray(alpha_arr), (S,) + alpha_arr.shape
+            )
             load_s = jnp.asarray(
                 [s.normalized_load for _, s, _ in b.members],
                 dtype=jnp.float64,
@@ -927,13 +969,30 @@ def _simulate_batch_fused(entries, traces, out, *, mu, alpha, waitout,
     return leftover
 
 
+_FUSE_OFF_VALUES = ("0", "false", "off", "no")
+_FUSE_ON_VALUES = ("", "1", "true", "on", "yes")
+
+
 def _fuse_enabled(fuse: bool | None) -> bool:
     """Grid fusion defaults ON for the jax backend; disable per call
-    (``fuse=False``) or per process (``REPRO_GRID_FUSE=0``)."""
+    (``fuse=False``) or per process (``REPRO_GRID_FUSE=0``).  An
+    unrecognized env value warns (mirroring the
+    ``REPRO_RUNNER_CACHE_CAP`` parser) instead of silently acting as
+    fuse-ON — a typo like ``"nope"`` should not flip the engine's
+    execution strategy without a trace."""
     if fuse is not None:
         return fuse
     raw = os.environ.get("REPRO_GRID_FUSE", "1").strip().lower()
-    return raw not in ("0", "false", "off", "no")
+    if raw in _FUSE_OFF_VALUES:
+        return False
+    if raw not in _FUSE_ON_VALUES:
+        warnings.warn(
+            f"REPRO_GRID_FUSE={raw!r} is not a recognized on/off value "
+            f"(off: {'/'.join(_FUSE_OFF_VALUES)}; on: 1/true/on/yes); "
+            "grid fusion stays ON",
+            stacklevel=2,
+        )
+    return True
 
 
 def grid_plan(

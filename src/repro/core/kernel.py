@@ -51,6 +51,8 @@ from .straggler import (
     PerRoundModel,
     StragglerModel,
     WindowwiseOr,
+    _cluster_counts_ok,
+    _round_robin_clusters,
 )
 
 __all__ = [
@@ -59,6 +61,8 @@ __all__ = [
     "GCKernel",
     "SRSGCKernel",
     "MSGCKernel",
+    "DCGCKernel",
+    "SBGCKernel",
     "UncodedKernel",
     "GateState",
     "GateKernel",
@@ -153,6 +157,20 @@ class MSGCState(SchemeState):
 
     pend: np.ndarray      # (cells, slots, n, W-1) bool failed-D1 queue
     d2: np.ndarray | None  # (cells, slots, B, n) bool; None when lam == n
+
+
+@dataclass
+class DCGCState(SchemeState):
+    """Dynamic-clustering GC: the only cross-round state is the
+    previous round's admitted straggler row, which fixes the next
+    round's cluster assignment."""
+
+    prev: np.ndarray  # (cells, n) bool
+
+
+@dataclass
+class SBGCState(SchemeState):
+    pass
 
 
 @dataclass
@@ -635,6 +653,100 @@ class MSGCKernel(SchemeKernel):
         return state
 
 
+class DCGCKernel(SchemeKernel):
+    """Dynamic-clustering GC (scenario-sweep baseline): per-round
+    decode like GC (T = 0), but decodability is per-CLUSTER — every
+    cluster re-formed from the previous round's admitted straggler row
+    must keep <= s stragglers.  The assignment is the same cumsum-based
+    round-robin deal the design model uses
+    (``straggler._round_robin_clusters``); ``prev`` rides in the state
+    so the staged scan carries it like any other array."""
+
+    name = "dc-gc"
+
+    def __init__(self, scheme, backend: Backend | None = None):
+        super().__init__(scheme, backend)
+        self.C, self.s = scheme.C, scheme.s
+        # `s` enters only as the per-cluster count threshold, so s
+        # sweeps at fixed (n, C) grid-fuse; C is structural (a static
+        # loop bound in the cluster reductions)
+        self.fused_params = ("s",)
+
+    def bind_fused(self, scalars: dict):
+        if "s" not in scalars:
+            return self, self.design_model
+        s = scalars["s"]
+        return (
+            _rebind_scalars(self, s=s),
+            _rebind_scalars(self.design_model, s=s),
+        )
+
+    def init_state(self, cells: int) -> DCGCState:
+        xp = self.bk.xp
+        return DCGCState(
+            prev=xp.zeros((cells, self.n), dtype=bool),
+            **self._base_arrays(cells),
+        )
+
+    def step(self, state: DCGCState, t, stragglers) -> DCGCState:
+        xp = self.bk.xp
+        valid = self._valid(t)
+        if valid is False:
+            return state
+        cid = _round_robin_clusters(state.prev, self.C)
+        pending = self._pending(state, t, valid)
+        if pending is not None:
+            can = _cluster_counts_ok(stragglers, cid, self.C, self.s)
+            state = self._mark_done(state, t, pending, can, t,
+                                    deadline=True, valid=valid)
+        # the admitted row becomes the next round's assignment input
+        if valid is True:
+            state.prev = stragglers
+        else:
+            state.prev = xp.where(valid, stragglers, state.prev)
+        return state
+
+
+class SBGCKernel(SchemeKernel):
+    """Stochastic-block GC (scenario-sweep baseline): per-round decode
+    with <= s stragglers per seed-drawn block.  The block partition is
+    a fixed host constant read off the prototype, so the kernel is
+    **seed-sensitive** — the engine fans the seed axis out and keys
+    the compiled-runner caches on the seed."""
+
+    name = "sb-gc"
+    seed_sensitive = True
+
+    def __init__(self, scheme, backend: Backend | None = None):
+        super().__init__(scheme, backend)
+        self.C, self.s = scheme.C, scheme.s
+        self.block_of = np.asarray(scheme.block_of, dtype=np.int64)
+        self.fused_params = ("s",)
+
+    def bind_fused(self, scalars: dict):
+        if "s" not in scalars:
+            return self, self.design_model
+        s = scalars["s"]
+        return (
+            _rebind_scalars(self, s=s),
+            _rebind_scalars(self.design_model, s=s),
+        )
+
+    def init_state(self, cells: int) -> SBGCState:
+        return SBGCState(**self._base_arrays(cells))
+
+    def step(self, state: SBGCState, t, stragglers) -> SBGCState:
+        valid = self._valid(t)
+        if valid is False:
+            return state
+        pending = self._pending(state, t, valid)
+        if pending is None:
+            return state
+        can = _cluster_counts_ok(stragglers, self.block_of, self.C, self.s)
+        return self._mark_done(state, t, pending, can, t, deadline=True,
+                               valid=valid)
+
+
 class UncodedKernel(SchemeKernel):
     """Uncoded baseline: tolerates no stragglers (the gate waits every
     candidate out, so admitted straggler sets are empty)."""
@@ -1075,3 +1187,9 @@ def make_kernel(scheme, backend: Backend | None = None) -> SchemeKernel:
             f"no lockstep kernel registered for scheme {scheme.name!r}"
         ) from None
     return cls(scheme, backend)
+
+
+# lockstep kernels for the scenario-sweep baselines (their schemes
+# register in ``core.schemes`` through the same public hooks)
+register_kernel("dc-gc", DCGCKernel)
+register_kernel("sb-gc", SBGCKernel)

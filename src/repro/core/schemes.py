@@ -60,9 +60,11 @@ from .gc import GradientCode, RepGradientCode, make_gradient_code
 from .straggler import (
     ArbitraryModel,
     BurstyModel,
+    DynamicClusterModel,
     MixtureModel,
     PerRoundModel,
     RepCoverageModel,
+    StochasticBlockModel,
     WindowwiseOr,
 )
 
@@ -72,6 +74,8 @@ __all__ = [
     "GCScheme",
     "SRSGCScheme",
     "MSGCScheme",
+    "DCGCScheme",
+    "SBGCScheme",
     "NoCodingScheme",
     "make_scheme",
     "register_scheme",
@@ -571,6 +575,161 @@ class MSGCScheme(Scheme):
 
 
 # ---------------------------------------------------------------------------
+# scenario-sweep baselines: dynamic-clustering GC and stochastic-block GC
+# ---------------------------------------------------------------------------
+
+
+class _ClusteredGCScheme(Scheme):
+    """Shared master state machine for the clustered per-round GC
+    baselines (Sec.-6 comparison schemes): workers are partitioned into
+    ``C`` clusters, each protected by a within-cluster gradient code of
+    tolerance ``s``, and job-t decodes from round-t survivors iff every
+    cluster keeps at least ``size - s`` of them (T = 0, like GC).  The
+    per-worker normalized load is ``(s+1)/n`` either way — each cluster
+    owns a data share proportional to its size — so these baselines
+    trade *where* tolerance sits (per cluster vs global) at EQUAL load,
+    which is exactly the comparison the scenario sweeps reproduce.
+
+    Subclasses define :meth:`_assignment` (the cluster id per worker
+    for round t).  This descriptor path is deliberately written
+    loop-style and stays fully independent of the lockstep kernels —
+    it is the bit-for-bit differential oracle.  ``collect`` reports
+    survivor bookkeeping only (the coded trainer consumes the paper's
+    schemes; coefficient-level decode of the baselines is out of
+    scope for the load/runtime reproduction).
+    """
+
+    def __init__(self, n: int, J: int, *, C: int = 4, s: int = 1):
+        if not 1 <= C <= n:
+            raise ValueError(f"need 1 <= C <= n, got C={C}")
+        if n % C:
+            raise ValueError(f"{self.name} requires C | n")
+        if not 0 <= s < n // C:
+            raise ValueError(f"need 0 <= s < n/C = {n // C}, got s={s}")
+        self.n, self.J, self.C, self.s = n, J, C, s
+        self.T = 0
+        self.normalized_load = (s + 1) / n
+        self._returned: dict[int, np.ndarray] = {}   # job -> bool[n]
+        self._cid: dict[int, np.ndarray] = {}        # round -> int[n]
+        self._done: set[int] = set()
+
+    def _assignment(self, t: int) -> np.ndarray:
+        raise NotImplementedError
+
+    def assign(self, t: int) -> list[MiniTask]:
+        if not 1 <= t <= self.J:
+            return [MiniTask("none", t, i) for i in range(self.n)]
+        self._cid[t] = self._assignment(t)
+        return [MiniTask("ell", t, i) for i in range(self.n)]
+
+    def observe(self, t: int, stragglers: np.ndarray) -> None:
+        if 1 <= t <= self.J:
+            self._returned[t] = ~stragglers
+
+    def _collect_jobs_oracle(self, t: int) -> list[tuple[int, int]]:
+        if t in self._done or not 1 <= t <= self.J:
+            return []
+        surv = self._returned.get(t)
+        if surv is None:
+            surv = np.zeros(self.n, dtype=bool)
+        cid = self._cid[t]
+        for c in range(self.C):
+            members = np.flatnonzero(cid == c)
+            lost = int((~surv[members]).sum())
+            if lost > self.s:
+                raise AssertionError(
+                    f"{self.name}: job {t} undecodable — cluster {c} "
+                    f"lost {lost} > s = {self.s} workers; caller "
+                    "violated the wait-out contract"
+                )
+        self._done.add(t)
+        return [(t, t)]
+
+    def collect(self, t: int) -> list[JobDecode]:
+        out = []
+        for job, done_round in self._collect_jobs_oracle(t):
+            surv = self._returned.get(job)
+            workers = (
+                np.flatnonzero(surv).tolist() if surv is not None else []
+            )
+            out.append(
+                JobDecode(job=job, round_done=done_round,
+                          d1_workers=workers)
+            )
+        return out
+
+
+class DCGCScheme(_ClusteredGCScheme):
+    """Dynamic-clustering GC (Buyukates et al., arXiv:2011.01922),
+    load-only reproduction: every round the clusters are re-formed from
+    the PREVIOUS round's straggler set — past stragglers are dealt
+    round-robin across clusters (at most ``ceil/C`` per cluster), the
+    rest fill in worker order — so temporally correlated stragglers
+    spread out and the per-cluster tolerance ``s`` covers up to
+    ``C * s`` total stragglers in the bursty regimes the paper
+    targets.  Same normalized load as an (n, s)-GC; design model
+    :class:`~repro.core.straggler.DynamicClusterModel` (window 2: the
+    previous committed row fixes the assignment)."""
+
+    name = "dc-gc"
+
+    def __init__(self, n: int, J: int, *, C: int = 4, s: int = 1,
+                 seed: int = 0):
+        super().__init__(n, J, C=C, s=s)
+        self.design_model = DynamicClusterModel(n, C, s)
+        self._prev = np.zeros(n, dtype=bool)
+
+    def _assignment(self, t: int) -> np.ndarray:
+        # independent loop-style implementation of the kernel's
+        # cumsum-based round-robin deal (the differential oracle)
+        cid = np.empty(self.n, dtype=np.int64)
+        nxt = 0
+        for i in np.flatnonzero(self._prev):
+            cid[i] = nxt % self.C
+            nxt += 1
+        for i in np.flatnonzero(~self._prev):
+            cid[i] = nxt % self.C
+            nxt += 1
+        return cid
+
+    def observe(self, t: int, stragglers: np.ndarray) -> None:
+        super().observe(t, stragglers)
+        if 1 <= t <= self.J:
+            self._prev = np.array(stragglers, dtype=bool, copy=True)
+
+
+class SBGCScheme(_ClusteredGCScheme):
+    """Stochastic-block GC (Charles & Papailiopoulos, arXiv:1805.10378),
+    load-only reproduction: ONE seed-drawn random partition of the
+    workers into ``C`` equal blocks (the stochastic block structure of
+    the assignment matrix), fixed for the whole run; job-t decodes iff
+    every block keeps <= ``s`` stragglers.  The block draw reads the
+    gradient-code ``seed``, so the scheme is **seed-sensitive**: the
+    batch engine fans the seed axis out instead of broadcasting
+    (``core/testing.py`` documents the fixture pattern this follows).
+    """
+
+    name = "sb-gc"
+    seed_sensitive = True
+
+    def __init__(self, n: int, J: int, *, C: int = 4, s: int = 1,
+                 seed: int = 0):
+        super().__init__(n, J, C=C, s=s)
+        self.seed = seed
+        rng = np.random.default_rng(seed)
+        perm = rng.permutation(n)
+        blocks = np.empty(n, dtype=np.int64)
+        blocks[perm] = np.arange(n) % C
+        self.block_of = blocks
+        self.design_model = StochasticBlockModel(
+            n, C, s, tuple(int(b) for b in blocks)
+        )
+
+    def _assignment(self, t: int) -> np.ndarray:
+        return self.block_of
+
+
+# ---------------------------------------------------------------------------
 # Uncoded baseline
 # ---------------------------------------------------------------------------
 
@@ -643,3 +802,10 @@ def make_scheme(name: str, n: int, J: int, **kw) -> Scheme:
     if name in ("uncoded", "none", "no-coding"):
         return NoCodingScheme(n, J)
     raise ValueError(f"unknown scheme {name!r}")
+
+
+# the scenario-sweep baselines register through the public extension
+# hooks (the pattern docs/scheme_kernels.md walks through); their
+# lockstep kernels register alongside in ``core.kernel``
+register_scheme("dc-gc", lambda n, J, **kw: DCGCScheme(n, J, **kw))
+register_scheme("sb-gc", lambda n, J, **kw: SBGCScheme(n, J, **kw))

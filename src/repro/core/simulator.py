@@ -222,7 +222,7 @@ def select_parameters_legacy(
 
 def params_delay(name: str, params: dict) -> int:
     name = name.lower().replace("_", "-")
-    if name == "gc" or name in ("uncoded", "none", "no-coding"):
+    if name in ("gc", "dc-gc", "sb-gc", "uncoded", "none", "no-coding"):
         return 0
     if name == "sr-sgc":
         return params["B"]
@@ -254,6 +254,13 @@ def default_grid(name: str, n: int, max_T: int = 3) -> list[dict]:
                 for lam in range(0, min(n, 33)):
                     out.append({"B": B, "W": W, "lam": lam})
         return out
+    if name in ("dc-gc", "sb-gc"):
+        return [
+            {"C": C, "s": s}
+            for C in (2, 4, 8)
+            if n % C == 0
+            for s in range(0, min(n // C, 17))
+        ]
     if name in ("uncoded", "none", "no-coding"):
         return [{}]
     raise ValueError(name)

@@ -43,9 +43,15 @@ __all__ = [
     "MixtureModel",
     "WindowwiseOr",
     "RepCoverageModel",
+    "DynamicClusterModel",
+    "StochasticBlockModel",
     "ConformanceGate",
     "GilbertElliotSource",
     "TraceSource",
+    "TraceModel",
+    "LambdaTraceGenerator",
+    "Scenario",
+    "trace_library",
     "fit_gilbert_elliot",
     "suggest_parameters",
 ]
@@ -766,6 +772,218 @@ class WindowwiseOr(StragglerModel):
         return self.W
 
 
+# ---------------------------------------------------------------------------
+# cluster-capacity models (scenario-sweep baselines)
+# ---------------------------------------------------------------------------
+
+
+def _round_robin_clusters(prev, C: int):
+    """Cluster id per worker from the previous round's straggler row:
+    previous stragglers are dealt round-robin across the ``C`` clusters
+    first (in worker order), then the remaining workers fill in worker
+    order — so bursty stragglers land at most ``ceil(S/C)`` per
+    cluster.  ``prev``: (..., n) bool; returns ints of the same shape.
+    Pure cumulative sums, no sort (XLA-CPU sort/scatter is a known
+    cliff inside the scanned round loop)."""
+    xp = xp_of(prev)
+    strag = xp.cumsum(prev, axis=-1)
+    total = strag[..., -1:]
+    other = xp.cumsum(~prev, axis=-1)
+    rank = xp.where(prev, strag - 1, total + other - 1)
+    return rank % C
+
+
+def _cluster_counts_ok(strag, cid, C: int, s):
+    """Does every cluster keep <= ``s`` stragglers?  ``strag`` is
+    (..., n) bool, ``cid`` broadcasts against it; reduces the worker
+    axis.  The loop over ``C`` is static (a per-spec cost), so the
+    check stays a handful of elementwise ops under jit/vmap."""
+    xp = xp_of(strag)
+    ok = None
+    for c in range(C):
+        ok_c = (strag & (cid == c)).sum(axis=-1) <= s
+        ok = ok_c if ok is None else ok & ok_c
+    return ok
+
+
+def _cluster_min_drops(cand, cid, C: int, s, order):
+    """Minimal k such that dropping the k first candidates in ``order``
+    brings every cluster's straggler count to <= ``s``: per cluster,
+    the position in the global drop order where its dropped count
+    reaches its shortfall (max over clusters; 0 when none is over).
+    Every over-count is fixable by dropping that cluster's own
+    candidates, so no sentinel is needed."""
+    xp = xp_of(cand)
+    cid = xp.broadcast_to(cid, cand.shape)
+    cid_o = xp.take_along_axis(cid, order, axis=1)
+    cand_o = xp.take_along_axis(cand, order, axis=1)
+    out = None
+    for c in range(C):
+        inc = cand_o & (cid_o == c)
+        need = xp.maximum(inc.sum(axis=1) - s, 0)
+        cum = xp.cumsum(inc, axis=1)
+        kc = (cum >= xp.maximum(need, 1)[:, None]).argmax(axis=1) + 1
+        kc = xp.where(need > 0, kc, 0)
+        out = kc if out is None else xp.maximum(out, kc)
+    return out
+
+
+def _cluster_drops_lower_bound(cand, cid, C: int, s):
+    """Sum of per-cluster shortfalls — a valid lower bound on the drops
+    any order needs (each drop decrements exactly one cluster)."""
+    xp = xp_of(cand)
+    out = None
+    for c in range(C):
+        kc = xp.maximum((cand & (cid == c)).sum(axis=1) - s, 0)
+        out = kc if out is None else out + kc
+    return out
+
+
+@dataclass(frozen=True)
+class DynamicClusterModel(StragglerModel):
+    """Per-round tolerability of dynamic-clustering GC (Buyukates et
+    al., arXiv:2011.01922): every round the ``n`` workers are
+    re-partitioned into ``C`` clusters from the PREVIOUS round's
+    straggler row (:func:`_round_robin_clusters` — past stragglers are
+    spread evenly), and the round conforms iff every cluster keeps
+    <= ``s`` stragglers.  With no history (round 1 / an all-clear
+    previous row) the assignment degenerates to the identity layout
+    ``worker i -> cluster i mod C``.
+
+    ``window == 2``: a suffix window's first row fixes the assignment,
+    its last row is the candidate — which makes the history dependence
+    expressible through the gate's standard rolling-buffer protocol.
+    Committed rows need no rechecking (they were admitted under their
+    own assignment), so every hook below validates the LAST row only.
+    Tied to worker layout, hence not ``column_reducible``.
+    """
+
+    n: int
+    C: int
+    s: int
+
+    def __post_init__(self) -> None:
+        if not 1 <= self.C <= self.n:
+            raise ValueError(f"need 1 <= C <= n, got C={self.C}")
+        if self.n % self.C:
+            raise ValueError("DynamicClusterModel requires C | n")
+        if not 0 <= self.s < self.n // self.C:
+            raise ValueError(
+                f"need 0 <= s < n/C = {self.n // self.C}, got s={self.s}"
+            )
+
+    def _cid(self, prev):
+        return _round_robin_clusters(prev, self.C)
+
+    def conforms(self, pattern: np.ndarray) -> bool:
+        pat = np.asarray(pattern, dtype=bool)
+        if pat.shape[0] == 0:
+            return True
+        prev = np.zeros_like(pat)
+        prev[1:] = pat[:-1]
+        return bool(
+            _cluster_counts_ok(pat, self._cid(prev), self.C, self.s).all()
+        )
+
+    def suffix_ok(self, win: np.ndarray) -> bool:
+        prev = win[-2] if win.shape[0] >= 2 else np.zeros_like(win[-1])
+        return bool(
+            _cluster_counts_ok(win[-1], self._cid(prev), self.C, self.s)
+        )
+
+    def suffix_ok_batch(self, win: np.ndarray) -> np.ndarray:
+        xp = xp_of(win)
+        prev = (
+            win[:, -2] if win.shape[1] >= 2 else xp.zeros_like(win[:, -1])
+        )
+        return _cluster_counts_ok(win[:, -1], self._cid(prev), self.C,
+                                  self.s)
+
+    def min_drops_batch(self, buf, cand, rank, order) -> np.ndarray:
+        xp = xp_of(cand)
+        prev = buf[:, -1] if buf.shape[1] else xp.zeros_like(cand)
+        return _cluster_min_drops(cand, self._cid(prev), self.C, self.s,
+                                  order)
+
+    def admit_fn_batch(self, buf):
+        xp = xp_of(buf)
+        if buf.shape[1]:
+            cid = self._cid(buf[:, -1])
+        else:
+            cid = xp.arange(self.n) % self.C  # zero history: identity
+        return lambda cand: _cluster_counts_ok(cand, cid, self.C, self.s)
+
+    def drops_lower_bound_fn_batch(self, buf, cost):
+        xp = xp_of(cost)
+        if buf.shape[1]:
+            cid = self._cid(buf[:, -1])
+        else:
+            cid = xp.arange(self.n) % self.C
+        return lambda cand: _cluster_drops_lower_bound(cand, cid, self.C,
+                                                       self.s)
+
+    @property
+    def window(self) -> int:
+        return 2
+
+
+@dataclass(frozen=True)
+class StochasticBlockModel(StragglerModel):
+    """Per-round tolerability of stochastic-block GC (Charles &
+    Papailiopoulos, arXiv:1805.10378): a FIXED random partition of the
+    ``n`` workers into ``C`` equal blocks (drawn from the
+    gradient-code seed by the scheme), and a round conforms iff every
+    block keeps <= ``s`` stragglers.  ``blocks`` is the length-n tuple
+    of block ids — a tuple so the frozen dataclass stays hashable;
+    the array view is cached at construction.  Worker-layout-bound,
+    hence not ``column_reducible``; window 1 (memoryless)."""
+
+    n: int
+    C: int
+    s: int
+    blocks: tuple
+
+    def __post_init__(self) -> None:
+        if len(self.blocks) != self.n:
+            raise ValueError("blocks must assign every worker")
+        if not 0 <= self.s < self.n // self.C:
+            raise ValueError(
+                f"need 0 <= s < n/C = {self.n // self.C}, got s={self.s}"
+            )
+        object.__setattr__(
+            self, "_bl", np.asarray(self.blocks, dtype=np.int64)
+        )
+
+    def conforms(self, pattern: np.ndarray) -> bool:
+        pat = np.asarray(pattern, dtype=bool)
+        if pat.shape[0] == 0:
+            return True
+        return bool(
+            _cluster_counts_ok(pat, self._bl, self.C, self.s).all()
+        )
+
+    def suffix_ok(self, win: np.ndarray) -> bool:
+        return self.conforms(win)
+
+    def suffix_ok_batch(self, win: np.ndarray) -> np.ndarray:
+        return _cluster_counts_ok(win, self._bl, self.C, self.s).all(axis=1)
+
+    def min_drops_batch(self, buf, cand, rank, order) -> np.ndarray:
+        return _cluster_min_drops(cand, self._bl, self.C, self.s, order)
+
+    def admit_fn_batch(self, buf):
+        return lambda cand: _cluster_counts_ok(cand, self._bl, self.C,
+                                               self.s)
+
+    def drops_lower_bound_fn_batch(self, buf, cost):
+        return lambda cand: _cluster_drops_lower_bound(cand, self._bl,
+                                                       self.C, self.s)
+
+    @property
+    def window(self) -> int:
+        return 1
+
+
 class _ModelTracker:
     """O(1)-per-round rolling conformance state for one windowed model.
 
@@ -958,6 +1176,209 @@ class TraceSource:
             reps = -(-rounds // self.delays.shape[0])
             return np.tile(self.delays, (reps, 1))[:rounds]
         return self.delays[:rounds]
+
+
+@dataclass
+class TraceModel:
+    """Replays a RECORDED per-round straggler pattern as a delay
+    source: the bool ``pattern`` (rounds, n) tiles cyclically to any
+    horizon (like :class:`TraceSource` does for raw delays), straggler
+    slots draw a heavy-tailed slow multiplier, everything else sits at
+    ``base_time`` plus jitter.  This is how captured cluster logs (or
+    the synthetic recordings shipped in :func:`trace_library`) feed the
+    runtime simulator while keeping their exact straggler structure.
+    """
+
+    pattern: np.ndarray
+    base_time: float = 1.0
+    slow_factor: float = 4.0
+    jitter: float = 0.05
+    compute_scale: float = 8.0
+    seed: int = 0
+
+    @property
+    def n(self) -> int:
+        return self.pattern.shape[1]
+
+    @property
+    def alpha(self) -> float:
+        return self.base_time * self.compute_scale
+
+    def sample_pattern(self, rounds: int) -> np.ndarray:
+        pat = np.asarray(self.pattern, dtype=bool)
+        if rounds > pat.shape[0]:
+            reps = -(-rounds // pat.shape[0])
+            return np.tile(pat, (reps, 1))[:rounds]
+        return pat[:rounds]
+
+    def sample_delays(self, rounds: int) -> np.ndarray:
+        rng = np.random.default_rng(self.seed)
+        pat = self.sample_pattern(rounds)
+        base = self.base_time * (
+            1.0 + self.jitter * rng.standard_normal((rounds, self.n)) ** 2
+        )
+        slow = 1.0 + (self.slow_factor - 1.0) * rng.random((rounds, self.n))
+        return np.where(pat, base * np.maximum(slow, 1.0), base)
+
+
+@dataclass
+class LambdaTraceGenerator:
+    """AWS-Lambda-like delay synthesizer for the scenario sweeps.
+
+    Captures the serverless-cluster features the GE chain alone does
+    not: **cold starts** (a fraction of workers pays a one-off penalty
+    on their first round), **platform events** (whole-fleet slowdown
+    rounds), and **heterogeneous workers** — per-worker speed factors
+    drawn lognormal with sigma ``hetero``, which scale both the base
+    latency and the load slope.  :meth:`worker_alpha` exposes that
+    slope as a per-worker ``(n,)`` alpha vector; the simulation engines
+    accept it anywhere a scalar alpha is accepted (``time = ref +
+    (L - 1/n) * alpha_i``), so slow workers get slower *faster* as the
+    normalized load grows.  Transient straggling follows the same
+    2-state chain as :class:`GilbertElliotSource`.
+    """
+
+    n: int
+    seed: int = 0
+    base_time: float = 1.0
+    jitter: float = 0.06
+    cold_start: float = 2.5
+    cold_fraction: float = 0.7
+    p_ns: float = 0.05
+    p_sn: float = 0.65
+    slow_factor: float = 5.0
+    hetero: float = 0.0
+    p_event: float = 0.02
+    event_factor: float = 2.0
+    compute_scale: float = 8.0
+    #: fix this to share ONE fleet (one speed draw) across several
+    #: generators with different trace seeds; defaults to ``seed + 2``
+    speed_seed: int | None = None
+
+    def speed_factors(self) -> np.ndarray:
+        """(n,) per-worker speed multipliers (1.0 when homogeneous)."""
+        if self.hetero <= 0:
+            return np.ones(self.n)
+        sseed = self.speed_seed if self.speed_seed is not None else self.seed + 2
+        rng = np.random.default_rng(sseed)
+        return np.clip(rng.lognormal(0.0, self.hetero, self.n), 0.25, 4.0)
+
+    def worker_alpha(self) -> np.ndarray:
+        """(n,) load slope: seconds of extra compute per unit of
+        normalized load, per worker (slow workers pay more per chunk)."""
+        return self.base_time * self.compute_scale * self.speed_factors()
+
+    @property
+    def alpha(self) -> float:
+        """Scalar slope (fleet mean) for ``estimate_alpha`` callers."""
+        return float(self.worker_alpha().mean())
+
+    def sample_pattern(self, rounds: int) -> np.ndarray:
+        # delegate the transient-straggler chain (and its pinned RNG
+        # draw-order contract, see GilbertElliotSource) rather than
+        # duplicating it
+        return GilbertElliotSource(
+            n=self.n, seed=self.seed, p_ns=self.p_ns, p_sn=self.p_sn
+        ).sample_pattern(rounds)
+
+    def sample_delays(self, rounds: int) -> np.ndarray:
+        """(rounds, n) seconds at the reference load 1/n."""
+        rng = np.random.default_rng(self.seed + 1)
+        pat = self.sample_pattern(rounds)
+        speed = self.speed_factors()
+        base = self.base_time * speed[None, :] * (
+            1.0 + self.jitter * rng.standard_normal((rounds, self.n)) ** 2
+        )
+        slow = 1.0 + (self.slow_factor - 1.0) * rng.random((rounds, self.n))
+        out = np.where(pat, base * np.maximum(slow, 1.0), base)
+        cold = rng.random(self.n) < self.cold_fraction
+        out[0] = out[0] + np.where(cold, self.cold_start * speed, 0.0)
+        events = rng.random(rounds) < self.p_event
+        out[events] *= self.event_factor
+        return out
+
+
+@dataclass(frozen=True)
+class Scenario:
+    """One named entry of the straggler trace library: a stack of
+    reference delay profiles plus the load slope the profiles were
+    recorded at (a scalar, or a per-worker ``(n,)`` vector for
+    heterogeneous fleets)."""
+
+    name: str
+    delays: np.ndarray            # (num_traces, rounds, n)
+    alpha: object                 # float | (n,) float array
+    note: str = ""
+
+
+def trace_library(
+    n: int = 64,
+    rounds: int = 40,
+    num_traces: int = 4,
+    seed: int = 0,
+) -> list[Scenario]:
+    """The in-repo straggler trace library the scenario sweeps run on.
+
+    Five qualitatively different worker profiles, all deterministic in
+    ``seed`` (``num_traces`` independent traces each):
+
+    * ``ge-bursty`` — the paper's Fig.-1-calibrated GE chain (short
+      bursts, ~5% stragglers);
+    * ``ge-heavy`` — slower recovery (long bursts, more overlap);
+    * ``lambda-cold`` — :class:`LambdaTraceGenerator` with cold starts
+      and platform events, homogeneous workers;
+    * ``lambda-hetero`` — the same with lognormal worker speeds and the
+      matching **per-worker alpha vector** (heterogeneous load slope);
+    * ``replayed-waves`` — :class:`TraceModel` replaying a recorded
+      diagonal-wave pattern (two adjacent stragglers sweeping the
+      fleet), the adversarial-but-structured case cluster logs show.
+    """
+
+    def _stack(mk):
+        return np.stack([mk(k).sample_delays(rounds)
+                         for k in range(num_traces)])
+
+    ge_bursty = _stack(lambda k: GilbertElliotSource(
+        n=n, seed=seed + 10 * k, p_ns=0.035, p_sn=0.85, slow_factor=6.0,
+        jitter=0.05,
+    ))
+    ge_heavy = _stack(lambda k: GilbertElliotSource(
+        n=n, seed=seed + 10 * k + 1, p_ns=0.05, p_sn=0.35, slow_factor=6.0,
+        jitter=0.05,
+    ))
+    cold0 = LambdaTraceGenerator(n=n, seed=seed + 2)
+    lam_cold = _stack(lambda k: LambdaTraceGenerator(
+        n=n, seed=seed + 10 * k + 2,
+    ))
+    # ONE fleet (shared speed draw) across the hetero traces, so the
+    # scenario's per-worker alpha vector describes every trace
+    hetero0 = LambdaTraceGenerator(n=n, seed=seed + 3, hetero=0.35,
+                                   speed_seed=seed + 1009)
+    lam_het = _stack(lambda k: LambdaTraceGenerator(
+        n=n, seed=seed + 10 * k + 3, hetero=0.35,
+        speed_seed=seed + 1009,
+    ))
+    wave = np.zeros((rounds, n), dtype=bool)
+    for t in range(rounds):
+        wave[t, (2 * t) % n] = wave[t, (2 * t + 1) % n] = True
+    wave0 = TraceModel(wave, seed=seed + 4)
+    waves = _stack(lambda k: TraceModel(wave, seed=seed + 10 * k + 4))
+    # the GE source's calibrated slope; the Lambda/replay scenarios
+    # read their own generators' .alpha so a retuned compute scale can
+    # never drift from the delays it synthesized
+    ge_alpha = GilbertElliotSource(n=n).alpha
+    return [
+        Scenario("ge-bursty", ge_bursty, ge_alpha,
+                 "Fig.-1 calibrated short bursts"),
+        Scenario("ge-heavy", ge_heavy, ge_alpha,
+                 "long straggler bursts"),
+        Scenario("lambda-cold", lam_cold, cold0.alpha,
+                 "cold starts + platform events"),
+        Scenario("lambda-hetero", lam_het, hetero0.worker_alpha(),
+                 "lognormal worker speeds, per-worker alpha"),
+        Scenario("replayed-waves", waves, wave0.alpha,
+                 "recorded diagonal-wave pattern replay"),
+    ]
 
 
 def fit_gilbert_elliot(pattern: np.ndarray) -> dict:

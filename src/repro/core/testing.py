@@ -19,16 +19,33 @@ from __future__ import annotations
 
 import numpy as np
 
-from .kernel import UncodedKernel, _KERNELS, register_kernel
-from .schemes import _SCHEME_FACTORIES, NoCodingScheme, register_scheme
+from .kernel import (
+    GCKernel,
+    UncodedKernel,
+    _KERNELS,
+    _rebind_scalars,
+    register_kernel,
+)
+from .schemes import (
+    _SCHEME_FACTORIES,
+    GCScheme,
+    NoCodingScheme,
+    register_scheme,
+)
+from .straggler import PerRoundModel
 
 __all__ = [
     "SEEDED_UNCODED",
     "SeededUncodedScheme",
     "SeededUncodedKernel",
+    "FRAGILE_GC",
+    "FragileGCScheme",
+    "FragileGCKernel",
     "assert_sim_parity",
     "register_testing_schemes",
     "unregister_testing_schemes",
+    "register_fragile_gc",
+    "unregister_fragile_gc",
 ]
 
 
@@ -95,3 +112,66 @@ def register_testing_schemes() -> None:
 def unregister_testing_schemes() -> None:
     _SCHEME_FACTORIES.pop(SEEDED_UNCODED, None)
     _KERNELS.pop(SEEDED_UNCODED, None)
+
+
+FRAGILE_GC = "fragile-gc"
+
+
+class FragileGCScheme(GCScheme):
+    """General-code GC whose DESIGN MODEL is looser than its decode:
+    the gate admits up to ``d`` stragglers per round but only ``s``
+    are decodable, so any admitted round with ``s < count <= d``
+    stragglers kills the cell (a wait-out contract violation).
+
+    This is the registered fixture for ``strict=False`` dead-lane
+    handling: on every engine path a dead cell must yield ``None``
+    while its neighbours — including SIBLING SPECS in the same
+    grid-fused vmap bucket, where all lanes share one compiled scan —
+    stay bit-identical (numpy) / allclose (jax) to their healthy
+    stand-alone runs.  ``d = s`` (the default) is a perfectly healthy
+    general-code GC.
+    """
+
+    name = FRAGILE_GC
+
+    def __init__(self, n: int, J: int, *, s: int = 1, d: int | None = None,
+                 seed: int = 0):
+        super().__init__(n, s, J, prefer_rep=False, seed=seed)
+        self.d = s if d is None else d
+        self.design_model = PerRoundModel(self.d)
+
+
+class FragileGCKernel(GCKernel):
+    """Lockstep kernel for :class:`FragileGCScheme`: plain general-GC
+    stepping; both thresholds fuse (``s`` into the decode count, ``d``
+    into the gate member), so a doomed spec and healthy specs share
+    one vmap bucket — exactly the mid-bucket-death scenario the
+    differential suite pins."""
+
+    name = FRAGILE_GC
+
+    def __init__(self, scheme, backend=None):
+        super().__init__(scheme, backend)
+        self.fused_params = ("s", "d")
+
+    def bind_fused(self, scalars: dict):
+        kernel, model = self, self.design_model
+        if "s" in scalars:
+            kernel = _rebind_scalars(
+                self, code=_rebind_scalars(self.code, s=scalars["s"])
+            )
+        if "d" in scalars:
+            model = _rebind_scalars(model, s=scalars["d"])
+        return kernel, model
+
+
+def register_fragile_gc() -> None:
+    register_scheme(
+        FRAGILE_GC, lambda n, J, **kw: FragileGCScheme(n, J, **kw)
+    )
+    register_kernel(FRAGILE_GC, FragileGCKernel)
+
+
+def unregister_fragile_gc() -> None:
+    _SCHEME_FACTORIES.pop(FRAGILE_GC, None)
+    _KERNELS.pop(FRAGILE_GC, None)

@@ -47,6 +47,10 @@ CONFIGS = [
     ("m-sgc", dict(B=1, W=2, lam=3)),
     ("m-sgc", dict(B=2, W=3, lam=5)),
     ("m-sgc", dict(B=1, W=3, lam=12)),     # lam == n (Remark 3.2, no D2)
+    ("dc-gc", dict(C=3, s=2)),             # dynamic clustering (window-2
+    ("dc-gc", dict(C=4, s=1)),             #  gate member, tight s)
+    ("sb-gc", dict(C=3, s=2)),             # stochastic blocks (seed 0)
+    ("sb-gc", dict(C=2, s=3)),
     ("uncoded", {}),
 ]
 
@@ -87,7 +91,9 @@ def test_lockstep_matches_legacy_direct():
     n, J = 12, 18
     traces = _traces(n, 24, 2, seed0=5)
     for name, kw in [("m-sgc", dict(B=2, W=3, lam=5)),
-                     ("sr-sgc", dict(B=2, W=3, lam=5))]:
+                     ("sr-sgc", dict(B=2, W=3, lam=5)),
+                     ("dc-gc", dict(C=4, s=1)),
+                     ("sb-gc", dict(C=3, s=1))]:
         rl = simulate_lockstep(name, kw, traces, alpha=6.0, J=J)
         for c in range(2):
             ref = simulate(make_scheme(name, n, J, **dict(kw)), traces[c],
@@ -105,6 +111,8 @@ def test_ragged_grid_mixed_specs(waitout):
         ("gc", {"s": 3}),                   # T=0 -> J=22
         ("sr-sgc", {"B": 2, "W": 3, "lam": 5}),  # T=2 -> J=20
         ("m-sgc", {"B": 2, "W": 3, "lam": 5}),   # T=3 -> J=19
+        ("dc-gc", {"C": 3, "s": 1}),        # T=0 -> J=22
+        ("sb-gc", {"C": 4, "s": 1}),        # T=0 -> J=22
         ("uncoded", {}),                    # T=0 -> J=22
     ]
     traces = _traces(n, rounds, 2, seed0=40)
