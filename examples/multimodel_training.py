@@ -1,10 +1,16 @@
 """The paper's §4.2 experiment, end to end: train M=4 classifiers
 concurrently (interleaved, Remark 2.1) on a 64-worker cluster with
-naturally bursty (Gilbert-Elliott) stragglers, under all four schemes.
+naturally bursty (Gilbert-Elliott) stragglers, under all 7 registered
+schemes (the paper's four plus the Sec.-6 clustered baselines and the
+general-code GC variant).
 
 Every gradient is REALLY computed and decoded (numerics are exact); the
 wall clock is simulated from the delay profile so scheme runtimes are
 comparable — the Table-1 experiment at laptop scale.
+
+``scheme_grid(n)`` is the canonical 7-scheme configuration at an
+n-worker cluster; ``benchmarks/run.py coded-train`` reuses it for the
+end-to-end coded-training bench.
 
 Run:  PYTHONPATH=src python examples/multimodel_training.py [--jobs 120]
 """
@@ -14,12 +20,27 @@ import argparse
 from repro.core import GilbertElliotSource, make_scheme
 from repro.train import CodedTrainingDriver
 
-SCHEMES = {
-    "m-sgc": dict(B=1, W=2, lam=12),
-    "sr-sgc": dict(B=1, W=2, lam=12),
-    "gc": dict(s=8),
-    "uncoded": {},
-}
+
+def scheme_grid(n: int) -> list[tuple[str, str, dict]]:
+    """(label, scheme_name, kwargs) for all 7 registered schemes at an
+    n-worker cluster, at comparable operating points: the per-round
+    codes (gc-rep / gc / dc-gc / sb-gc) share the same tolerance ``s``
+    (gc-rep rounds down to the nearest ``(s+1) | n``), M-SGC/SR-SGC use
+    the B=1, W=2 point the paper's probe picks on short-burst profiles.
+    """
+    s = 3 if n <= 16 else n // 8
+    s_rep = next(k for k in range(s, -1, -1) if n % (k + 1) == 0)
+    lam = max(2, min(12, n // 4))
+    C = 4 if n % 4 == 0 and s < n // 4 else 2
+    return [
+        ("m-sgc", "m-sgc", dict(B=1, W=2, lam=lam)),
+        ("sr-sgc", "sr-sgc", dict(B=1, W=2, lam=lam)),
+        ("gc-rep", "gc", dict(s=s_rep)),
+        ("gc", "gc", dict(s=s, prefer_rep=False)),
+        ("dc-gc", "dc-gc", dict(C=C, s=s)),
+        ("sb-gc", "sb-gc", dict(C=C, s=s)),
+        ("uncoded", "uncoded", {}),
+    ]
 
 
 def main():
@@ -38,7 +59,7 @@ def main():
     print(f"{'scheme':9s} {'load':>7s} {'T':>2s} {'sim runtime':>12s} "
           f"{'final losses (M models)'}")
     results = {}
-    for name, kw in SCHEMES.items():
+    for label, name, kw in scheme_grid(args.workers):
         sch = make_scheme(name, args.workers, args.jobs, **kw)
         drv = CodedTrainingDriver(
             scheme=sch, num_models=args.models, batch_size=256,
@@ -46,8 +67,8 @@ def main():
         )
         clock = drv.run(args.jobs, delays)
         finals = [drv.losses[m][-1] for m in range(args.models)]
-        results[name] = clock
-        print(f"{name:9s} {sch.normalized_load:7.4f} {sch.T:2d} "
+        results[label] = clock
+        print(f"{label:9s} {sch.normalized_load:7.4f} {sch.T:2d} "
               f"{clock:11.1f}s  {[f'{l:.3f}' for l in finals]}")
 
     gain = 1 - results["m-sgc"] / results["gc"]

@@ -2,6 +2,14 @@
 partial gradients and checks the master's decode is *exactly* the full
 gradient.  This is the machine-checkable form of Props 3.1 / 3.2 and is
 reused by the coded trainer's unit tests.
+
+Cluster-structured codes (dc-gc / sb-gc) need no special casing here:
+their ``scheme.code`` adapter exposes the round's embedded (n, n)
+encode matrix, ``collect`` emits per-cluster decode vectors as plain
+``ell_weights``, and the generic "ell" task/decode branches below do
+the rest — so the same harness that certifies GC certifies the
+clustered baselines (``tests/test_exact_decode.py`` sweeps them over
+all conforming small-n patterns).
 """
 
 from __future__ import annotations

@@ -20,12 +20,24 @@ simulator only consumes the per-round load.  For simulation there is a
 functional lockstep kernels (``core.kernel``): ``step`` advances a
 1-cell ``SchemeState`` through the batched kernel and ``collect_jobs``
 reads newly decodable jobs off it, skipping the decode-weight solve —
-the simulator only needs decodability, not the beta vectors.  The
-descriptor path above stays fully independent of the kernels, which
-makes it the bit-for-bit oracle the differential tests
+the simulator only needs decodability, not the beta vectors.  When the
+caller DOES need coefficients on the fast path (the vectorized coded
+trainer), ``collect_decodes`` returns full ``JobDecode`` objects whose
+weights are solved from the kernel state plus the admitted rows that
+``step`` records — still no ``MiniTask`` descriptors.  The descriptor
+path above stays fully independent of the kernels, which makes it the
+bit-for-bit oracle the differential tests
 (``tests/test_batch_engine.py``, ``tests/test_lockstep.py``) run the
 kernels against.  Use one protocol or the other for a given run; do
 not interleave them round-by-round.
+
+For training, every scheme additionally exposes a static per-(worker,
+chunk-slot) view of its decode: ``chunk_grid()`` -> (num_chunks,
+slots), ``chunk_slots(job)`` -> (n, slots) global chunk ids, and
+``decode_weights(jd)`` -> (n, slots) f32 weights summing to exactly 1
+over the slots of every chunk — ``train.coded.make_coded_train_step``
+turns that grid into an exact full-batch gradient (see
+docs/scheme_kernels.md, "Encode matrices & exact decode").
 
 Schemes registered via :func:`register_scheme` without a matching
 kernel (``core.kernel.register_kernel``) keep working: ``step``/
@@ -56,7 +68,13 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
-from .gc import GradientCode, RepGradientCode, make_gradient_code
+from .gc import (
+    ClusterGradientCode,
+    GradientCode,
+    RepGradientCode,
+    cyclic_support,
+    make_gradient_code,
+)
 from .straggler import (
     ArbitraryModel,
     BurstyModel,
@@ -154,14 +172,20 @@ class Scheme:
     def step(self, t: int, stragglers: np.ndarray) -> None:
         """Fused assign + observe + decodability bookkeeping without
         materializing MiniTasks (one ``SchemeKernel.step`` on a 1-cell
-        state; descriptor-path fallback for kernel-less schemes)."""
+        state; descriptor-path fallback for kernel-less schemes).  The
+        admitted row is recorded so :meth:`collect_decodes` can solve
+        decode weights from it later."""
+        row = np.asarray(stragglers, dtype=bool)
+        rows = getattr(self, "_admitted", None)
+        if rows is None:
+            rows = self._admitted = {}
+        rows[t] = row.copy()
         kern = self._kernel()
         if kern is None:
             self.assign(t)
-            self.observe(t, stragglers)
+            self.observe(t, row)
             return
-        strag = np.asarray(stragglers, dtype=bool).reshape(1, -1)
-        self._kstate = kern.step(self._kstate, t, strag)
+        self._kstate = kern.step(self._kstate, t, row.reshape(1, -1))
 
     def collect_jobs(self, t: int) -> list[tuple[int, int]]:
         """Sim-only collect: ``[(job, round_done)]`` skipping the
@@ -181,9 +205,76 @@ class Scheme:
             if int(st.done_round[0, job]) == t
         ]
 
+    def _admitted_row(self, t: int) -> np.ndarray:
+        """Straggler row admitted at round-t on the fast path (all-False
+        when round-t was never stepped)."""
+        rows = getattr(self, "_admitted", None)
+        row = rows.get(t) if rows else None
+        return row if row is not None else np.zeros(self.n, dtype=bool)
+
+    def collect_decodes(self, t: int) -> list[JobDecode]:
+        """Coefficient-bearing collect on the load-only fast path: the
+        same ``JobDecode`` objects the descriptor ``collect`` produces,
+        but with the decode weights solved from the 1-cell kernel
+        ``SchemeState`` plus the recorded admitted rows — no ``MiniTask``
+        descriptors are ever materialized.  The vectorized coded trainer
+        (``train.driver.VectorizedCodedTrainer``) consumes this; the
+        kernel-less fallback is the descriptor ``collect``."""
+        if self._kernel() is None:
+            return self.collect(t)
+        return [
+            self._decode_from_state(job, r)
+            for job, r in self.collect_jobs(t)
+        ]
+
+    def _decode_from_state(self, job: int, round_done: int) -> JobDecode:
+        """Build the job's ``JobDecode`` from the kernel-path state
+        (scheme-specific; only needed when a kernel is registered)."""
+        raise NotImplementedError
+
     def round_load(self, t: int) -> float:
         """Per-worker normalized load in round-t (constant for all schemes)."""
         return self.normalized_load
+
+    # -- coded-trainer surface ------------------------------------------
+    # Every scheme maps its decode onto a fixed per-(worker, chunk-slot)
+    # weight grid: ``chunk_grid()`` gives (num_chunks, slots),
+    # ``chunk_slots(job)`` maps slot (i, j) to a global chunk id, and
+    # ``decode_weights(jd)`` returns (n, slots) f32 weights with
+    # ``sum over {(i,j): slot(i,j)=c} w[i,j] == 1`` for every chunk c of
+    # a decodable job — the weighted all-reduce inside
+    # ``train.coded.make_coded_train_step`` is then the exact decoder.
+    # Defaults implement the ell-style (n, s+1) layout shared by GC,
+    # SR-SGC and the clustered baselines; M-SGC and uncoded override.
+
+    def chunk_grid(self) -> tuple[int, int]:
+        """(num_chunks, slots): data chunks per job, chunk slots per
+        worker (static for the life of the scheme)."""
+        return self.n, self.s + 1
+
+    def _code_at(self, job: int):
+        """Gradient code whose encode matrix applies to ``job`` (the
+        static ``self.code`` except for round-re-clustered schemes)."""
+        return self.code
+
+    def chunk_slots(self, job: int) -> np.ndarray:
+        """(n, slots) int64: global chunk id per (worker, slot)."""
+        code = self._code_at(job)
+        return np.stack(
+            [code.chunks_of_worker(i) for i in range(self.n)]
+        ).astype(np.int64)
+
+    def decode_weights(self, jd: JobDecode) -> np.ndarray:
+        """(n, slots) f32 decode weights for a decoded job:
+        ``w[i, j] = beta_i * B[i, chunk(i, j)]`` with all-zero rows for
+        workers absent from the decode (stragglers / redundant)."""
+        code = self._code_at(jd.job)
+        slots = self.chunk_slots(jd.job)
+        w = np.zeros(slots.shape, dtype=np.float32)
+        B = code.encode_matrix
+        for i, beta in jd.ell_weights.items():
+            w[i] = beta * B[i, slots[i]]
+        return w
 
 
 # ---------------------------------------------------------------------------
@@ -253,6 +344,18 @@ class GCScheme(Scheme):
                 )
             )
         return out
+
+    def _decode_from_state(self, job: int, round_done: int) -> JobDecode:
+        # T = 0: job-t decodes from the round-t admitted row
+        surv = np.flatnonzero(~self._admitted_row(job))
+        beta = self.code.decode_vector(surv)
+        return JobDecode(
+            job=job,
+            round_done=round_done,
+            ell_weights={
+                int(w): float(beta[w]) for w in surv if beta[w] != 0.0
+            },
+        )
 
 
 # ---------------------------------------------------------------------------
@@ -385,6 +488,21 @@ class SRSGCScheme(Scheme):
                 )
             )
         return out
+
+    def _decode_from_state(self, job: int, round_done: int) -> JobDecode:
+        # the kernel's job-keyed ring has the returned-l(job) mask live
+        # until job + B + 1 enters — past every collect round for job
+        ret = np.flatnonzero(
+            np.asarray(self._kstate.returned[0, job % (self.B + 1)])
+        )
+        beta = self.code.decode_vector(ret)
+        return JobDecode(
+            job=job,
+            round_done=round_done,
+            ell_weights={
+                int(w): float(beta[w]) for w in ret if beta[w] != 0.0
+            },
+        )
 
 
 # ---------------------------------------------------------------------------
@@ -573,6 +691,80 @@ class MSGCScheme(Scheme):
             )
         return out
 
+    def _decode_from_state(self, job: int, round_done: int) -> JobDecode:
+        gw = {}
+        if self.lam < self.n:
+            # job-keyed D2 ring slot is live until job + slots enters at
+            # round job + T + 1 — past the job's decode deadline
+            d2 = np.asarray(self._kstate.d2[0, job % self.slots])
+            for m in range(self.B):
+                surv = np.flatnonzero(d2[m])
+                beta = self.code.decode_vector(surv)
+                gw[m] = {
+                    int(w): float(beta[w]) for w in surv if beta[w] != 0.0
+                }
+        return JobDecode(
+            job=job,
+            round_done=round_done,
+            d1_workers=list(range(self.n)),
+            group_weights=gw,
+        )
+
+    # -- coded-trainer surface (uniform-subchunk expansion) --------------
+    # The D1/D2 layout has unequal chunk fractions (w1 = (lam+1) * w2),
+    # so the rectangular (n, slots, chunk_bs, ...) coded view splits
+    # every D1 chunk into lam+1 equal subchunks of fraction w2: global
+    # subchunk ids are D1 chunk c -> [c*(lam+1), (c+1)*(lam+1)) followed
+    # by the (already w2-sized) D2 chunks verbatim.  D1 subchunks enter
+    # with weight 1 (owner only); group-m subchunks with
+    # beta_m[i] * B[i, c] — both sum to exactly 1 per subchunk, so the
+    # weighted coded loss decodes the full-batch gradient exactly.
+
+    def chunk_grid(self) -> tuple[int, int]:
+        if self.lam == self.n:  # Remark 3.2: no D2, uniform D1 already
+            return (self.W - 1) * self.n, self.W - 1
+        sub = self.lam + 1
+        return (
+            (self.W - 1) * self.n * sub + self.B * self.n,
+            (self.W - 1 + self.B) * sub,
+        )
+
+    def chunk_slots(self, job: int) -> np.ndarray:
+        n, W, B, lam = self.n, self.W, self.B, self.lam
+        if lam == n:
+            return np.stack(
+                [np.arange(i * (W - 1), (i + 1) * (W - 1)) for i in range(n)]
+            ).astype(np.int64)
+        sub = lam + 1
+        d2_base = (W - 1) * n * sub
+        slots = np.empty((n, (W - 1 + B) * sub), dtype=np.int64)
+        for i in range(n):
+            row: list[int] = []
+            for loc in range(W - 1):
+                c = self.d1_chunk(i, loc)
+                row.extend(range(c * sub, (c + 1) * sub))
+            for m in range(B):
+                row.extend(d2_base + m * n + cyclic_support(i, lam, n))
+            slots[i] = row
+        return slots
+
+    def decode_weights(self, jd: JobDecode) -> np.ndarray:
+        n, W, B, lam = self.n, self.W, self.B, self.lam
+        _, k = self.chunk_grid()
+        w = np.zeros((n, k), dtype=np.float32)
+        d1_cols = (W - 1) if lam == n else (W - 1) * (lam + 1)
+        for i in jd.d1_workers:
+            w[i, :d1_cols] = 1.0
+        if lam < n:
+            Bmat = self.code.encode_matrix
+            sub = lam + 1
+            for m, ws in jd.group_weights.items():
+                lo = d1_cols + m * sub
+                for i, beta in ws.items():
+                    sup = cyclic_support(i, lam, n)
+                    w[i, lo : lo + sub] = beta * Bmat[i, sup]
+        return w
+
 
 # ---------------------------------------------------------------------------
 # scenario-sweep baselines: dynamic-clustering GC and stochastic-block GC
@@ -591,15 +783,21 @@ class _ClusteredGCScheme(Scheme):
     which is exactly the comparison the scenario sweeps reproduce.
 
     Subclasses define :meth:`_assignment` (the cluster id per worker
-    for round t).  This descriptor path is deliberately written
-    loop-style and stays fully independent of the lockstep kernels —
-    it is the bit-for-bit differential oracle.  ``collect`` reports
-    survivor bookkeeping only (the coded trainer consumes the paper's
-    schemes; coefficient-level decode of the baselines is out of
-    scope for the load/runtime reproduction).
+    for round t, descriptor path) and :meth:`_kernel_cid` (the same
+    assignment re-derived from recorded admitted rows on the kernel
+    fast path).  The descriptor path is deliberately written loop-style
+    and stays fully independent of the lockstep kernels — it is the
+    bit-for-bit differential oracle.  ``collect`` emits REAL decode
+    coefficients: each cluster carries a within-cluster gradient code
+    (``gc.ClusterGradientCode``, fractional repetition when it fits)
+    whose decode vector is solved from the round-t survivors, so
+    ``executor.run_protocol`` verifies the decode is exactly the full
+    gradient and the coded trainer consumes these baselines like any
+    paper scheme.
     """
 
-    def __init__(self, n: int, J: int, *, C: int = 4, s: int = 1):
+    def __init__(self, n: int, J: int, *, C: int = 4, s: int = 1,
+                 seed: int = 0, prefer_rep: bool = True):
         if not 1 <= C <= n:
             raise ValueError(f"need 1 <= C <= n, got C={C}")
         if n % C:
@@ -608,18 +806,58 @@ class _ClusteredGCScheme(Scheme):
             raise ValueError(f"need 0 <= s < n/C = {n // C}, got s={s}")
         self.n, self.J, self.C, self.s = n, J, C, s
         self.T = 0
+        self.seed = seed
+        self._prefer_rep = prefer_rep
         self.normalized_load = (s + 1) / n
         self._returned: dict[int, np.ndarray] = {}   # job -> bool[n]
         self._cid: dict[int, np.ndarray] = {}        # round -> int[n]
         self._done: set[int] = set()
+        self._codes: dict[bytes, ClusterGradientCode] = {}
+        self._round = 0                              # latest scheduled round
 
     def _assignment(self, t: int) -> np.ndarray:
         raise NotImplementedError
+
+    def _kernel_cid(self, t: int) -> np.ndarray:
+        """Round-t cluster ids on the kernel fast path (from recorded
+        admitted rows instead of descriptor-path ``observe`` state)."""
+        raise NotImplementedError
+
+    def _cid_at(self, t: int) -> np.ndarray:
+        cid = self._cid.get(t)
+        if cid is None:
+            cid = self._cid[t] = self._kernel_cid(t)
+        return cid
+
+    def _code_for(self, cid: np.ndarray) -> ClusterGradientCode:
+        """Cluster code for one clustering, cached by assignment (the
+        inner (g, s) code is identical across clusterings; only the
+        embedding moves — sb-gc hits one entry, dc-gc one per distinct
+        re-clustering)."""
+        key = cid.tobytes()
+        code = self._codes.get(key)
+        if code is None:
+            code = self._codes[key] = ClusterGradientCode(
+                cid, self.s, prefer_rep=self._prefer_rep, seed=self.seed
+            )
+        return code
+
+    @property
+    def code(self) -> ClusterGradientCode:
+        """Cluster code of the most recently scheduled round: the
+        descriptor executor/driver read ``scheme.code.encode_matrix``
+        between ``assign(t)`` and ``collect(t)`` (dc-gc re-embeds per
+        round; sb-gc is constant)."""
+        return self._code_for(self._cid_at(self._round))
+
+    def _code_at(self, job: int) -> ClusterGradientCode:
+        return self._code_for(self._cid_at(job))
 
     def assign(self, t: int) -> list[MiniTask]:
         if not 1 <= t <= self.J:
             return [MiniTask("none", t, i) for i in range(self.n)]
         self._cid[t] = self._assignment(t)
+        self._round = t
         return [MiniTask("ell", t, i) for i in range(self.n)]
 
     def observe(self, t: int, stragglers: np.ndarray) -> None:
@@ -637,60 +875,86 @@ class _ClusteredGCScheme(Scheme):
             members = np.flatnonzero(cid == c)
             lost = int((~surv[members]).sum())
             if lost > self.s:
+                kept = members.size - lost
                 raise AssertionError(
                     f"{self.name}: job {t} undecodable — cluster {c} "
-                    f"lost {lost} > s = {self.s} workers; caller "
-                    "violated the wait-out contract"
+                    f"kept {kept} of {members.size} survivors "
+                    f"(lost {lost} > s = {self.s}); caller violated "
+                    "the wait-out contract"
                 )
         self._done.add(t)
         return [(t, t)]
+
+    def _ell_decode(self, job: int, round_done: int,
+                    surv_mask: np.ndarray) -> JobDecode:
+        surv = np.flatnonzero(surv_mask)
+        beta = self._code_at(job).decode_vector(surv)
+        return JobDecode(
+            job=job,
+            round_done=round_done,
+            ell_weights={
+                int(w): float(beta[w]) for w in surv if beta[w] != 0.0
+            },
+        )
 
     def collect(self, t: int) -> list[JobDecode]:
         out = []
         for job, done_round in self._collect_jobs_oracle(t):
             surv = self._returned.get(job)
-            workers = (
-                np.flatnonzero(surv).tolist() if surv is not None else []
-            )
-            out.append(
-                JobDecode(job=job, round_done=done_round,
-                          d1_workers=workers)
-            )
+            if surv is None:
+                surv = np.zeros(self.n, dtype=bool)
+            out.append(self._ell_decode(job, done_round, surv))
         return out
+
+    def _decode_from_state(self, job: int, round_done: int) -> JobDecode:
+        # T = 0: job-t decodes from the round-t admitted row
+        self._round = max(self._round, job)
+        return self._ell_decode(job, round_done, ~self._admitted_row(job))
 
 
 class DCGCScheme(_ClusteredGCScheme):
-    """Dynamic-clustering GC (Buyukates et al., arXiv:2011.01922),
-    load-only reproduction: every round the clusters are re-formed from
-    the PREVIOUS round's straggler set — past stragglers are dealt
-    round-robin across clusters (at most ``ceil/C`` per cluster), the
-    rest fill in worker order — so temporally correlated stragglers
-    spread out and the per-cluster tolerance ``s`` covers up to
-    ``C * s`` total stragglers in the bursty regimes the paper
-    targets.  Same normalized load as an (n, s)-GC; design model
+    """Dynamic-clustering GC (Buyukates et al., arXiv:2011.01922):
+    every round the clusters are re-formed from the PREVIOUS round's
+    straggler set — past stragglers are dealt round-robin across
+    clusters (at most ``ceil/C`` per cluster), the rest fill in worker
+    order — so temporally correlated stragglers spread out and the
+    per-cluster tolerance ``s`` covers up to ``C * s`` total stragglers
+    in the bursty regimes the paper targets.  Each round's clustering
+    re-embeds the within-cluster code into a fresh (n, n) encode
+    matrix (``_code_for`` caches per distinct clustering), so decode
+    is exact under re-clustering.  Same normalized load as an
+    (n, s)-GC; design model
     :class:`~repro.core.straggler.DynamicClusterModel` (window 2: the
     previous committed row fixes the assignment)."""
 
     name = "dc-gc"
 
     def __init__(self, n: int, J: int, *, C: int = 4, s: int = 1,
-                 seed: int = 0):
-        super().__init__(n, J, C=C, s=s)
+                 seed: int = 0, prefer_rep: bool = True):
+        super().__init__(n, J, C=C, s=s, seed=seed, prefer_rep=prefer_rep)
         self.design_model = DynamicClusterModel(n, C, s)
         self._prev = np.zeros(n, dtype=bool)
 
-    def _assignment(self, t: int) -> np.ndarray:
+    def _deal(self, prev: np.ndarray) -> np.ndarray:
         # independent loop-style implementation of the kernel's
         # cumsum-based round-robin deal (the differential oracle)
         cid = np.empty(self.n, dtype=np.int64)
         nxt = 0
-        for i in np.flatnonzero(self._prev):
+        for i in np.flatnonzero(prev):
             cid[i] = nxt % self.C
             nxt += 1
-        for i in np.flatnonzero(~self._prev):
+        for i in np.flatnonzero(~prev):
             cid[i] = nxt % self.C
             nxt += 1
         return cid
+
+    def _assignment(self, t: int) -> np.ndarray:
+        return self._deal(self._prev)
+
+    def _kernel_cid(self, t: int) -> np.ndarray:
+        # the kernel carries prev = previous round's admitted row
+        # (all-False before round 1), which `step` also records
+        return self._deal(self._admitted_row(t - 1))
 
     def observe(self, t: int, stragglers: np.ndarray) -> None:
         super().observe(t, stragglers)
@@ -699,13 +963,14 @@ class DCGCScheme(_ClusteredGCScheme):
 
 
 class SBGCScheme(_ClusteredGCScheme):
-    """Stochastic-block GC (Charles & Papailiopoulos, arXiv:1805.10378),
-    load-only reproduction: ONE seed-drawn random partition of the
-    workers into ``C`` equal blocks (the stochastic block structure of
-    the assignment matrix), fixed for the whole run; job-t decodes iff
-    every block keeps <= ``s`` stragglers.  The block draw reads the
-    gradient-code ``seed``, so the scheme is **seed-sensitive**: the
-    batch engine fans the seed axis out instead of broadcasting
+    """Stochastic-block GC (Charles & Papailiopoulos, arXiv:1805.10378):
+    ONE seed-drawn random partition of the workers into ``C`` equal
+    blocks (the stochastic block structure of the assignment matrix),
+    fixed for the whole run; job-t decodes iff every block loses <=
+    ``s`` stragglers, with the decode vector solved block-wise from the
+    within-block code.  The block draw reads the gradient-code
+    ``seed``, so the scheme is **seed-sensitive**: the batch engine
+    fans the seed axis out instead of broadcasting
     (``core/testing.py`` documents the fixture pattern this follows).
     """
 
@@ -713,9 +978,8 @@ class SBGCScheme(_ClusteredGCScheme):
     seed_sensitive = True
 
     def __init__(self, n: int, J: int, *, C: int = 4, s: int = 1,
-                 seed: int = 0):
-        super().__init__(n, J, C=C, s=s)
-        self.seed = seed
+                 seed: int = 0, prefer_rep: bool = True):
+        super().__init__(n, J, C=C, s=s, seed=seed, prefer_rep=prefer_rep)
         rng = np.random.default_rng(seed)
         perm = rng.permutation(n)
         blocks = np.empty(n, dtype=np.int64)
@@ -726,6 +990,9 @@ class SBGCScheme(_ClusteredGCScheme):
         )
 
     def _assignment(self, t: int) -> np.ndarray:
+        return self.block_of
+
+    def _kernel_cid(self, t: int) -> np.ndarray:
         return self.block_of
 
 
@@ -767,6 +1034,23 @@ class NoCodingScheme(Scheme):
             JobDecode(job=job, round_done=r, d1_workers=list(range(self.n)))
             for job, r in self._collect_jobs_oracle(t)
         ]
+
+    def _decode_from_state(self, job: int, round_done: int) -> JobDecode:
+        return JobDecode(
+            job=job, round_done=round_done, d1_workers=list(range(self.n))
+        )
+
+    # -- coded-trainer surface: one private chunk per worker, weight 1 --
+    def chunk_grid(self) -> tuple[int, int]:
+        return self.n, 1
+
+    def chunk_slots(self, job: int) -> np.ndarray:
+        return np.arange(self.n, dtype=np.int64)[:, None]
+
+    def decode_weights(self, jd: JobDecode) -> np.ndarray:
+        w = np.zeros((self.n, 1), dtype=np.float32)
+        w[jd.d1_workers] = 1.0
+        return w
 
 
 #: user-registered scheme factories: name -> factory(n, J, **kw)

@@ -1,6 +1,7 @@
 from .synthetic import (
     chunk_boundaries,
     classification_batch,
+    coded_slot_batch,
     gc_chunked_batch,
     token_batch,
 )
@@ -9,5 +10,6 @@ __all__ = [
     "token_batch",
     "classification_batch",
     "gc_chunked_batch",
+    "coded_slot_batch",
     "chunk_boundaries",
 ]

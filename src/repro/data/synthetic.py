@@ -10,7 +10,10 @@ And the gradient-coding data plumbing:
   * ``chunk_boundaries``    — split ``d`` examples into (possibly
     unequal) chunks by fractional sizes (M-SGC's D1/D2 layout),
   * ``gc_chunked_batch``    — build the (n, s+1, chunk_bs, ...) cyclic
-    replicated view consumed by the jitted coded train step.
+    replicated view consumed by the jitted coded train step,
+  * ``coded_slot_batch``    — the scheme-generic form: gather an
+    arbitrary (n, slots) chunk-id grid (``scheme.chunk_slots``) over
+    ``num_chunks`` equal chunks.
 
 All generators are stateless: batch for job-t is a pure function of
 (seed, job), so every worker that computes chunk-c of job-t sees the
@@ -84,5 +87,29 @@ def gc_chunked_batch(batch_pytree, n: int, s: int):
             raise ValueError(f"batch {b} not divisible by n={n}")
         chunks = leaf.reshape(n, b // n, *leaf.shape[1:])
         return chunks[idx]  # (n, s+1, cb, ...)
+
+    return jax.tree.map(g, batch_pytree)
+
+
+def coded_slot_batch(batch_pytree, slot_chunks, num_chunks: int):
+    """Scheme-generic replicated chunk view for the coded train step.
+
+    Splits the leading batch axis into ``num_chunks`` equal chunks and
+    gathers chunk ``slot_chunks[i, j]`` into slot (i, j), where
+    ``slot_chunks`` is the (n, slots) int grid from
+    ``scheme.chunk_slots(job)``.  Returns a pytree with leaves of shape
+    (n, slots, chunk_bs, ...); ``gc_chunked_batch`` is the cyclic
+    (n, s+1) special case.
+    """
+    idx = jnp.asarray(np.asarray(slot_chunks, dtype=np.int64))
+
+    def g(leaf):
+        b = leaf.shape[0]
+        if b % num_chunks:
+            raise ValueError(
+                f"batch {b} not divisible by num_chunks={num_chunks}"
+            )
+        chunks = leaf.reshape(num_chunks, b // num_chunks, *leaf.shape[1:])
+        return chunks[idx]  # (n, slots, cb, ...)
 
     return jax.tree.map(g, batch_pytree)

@@ -1,11 +1,17 @@
 from .coded import make_coded_train_step, make_serve_step, make_train_step
-from .driver import CodedTrainingDriver, MLPModel, run_adaptive
+from .driver import (
+    CodedTrainingDriver,
+    MLPModel,
+    VectorizedCodedTrainer,
+    run_adaptive,
+)
 
 __all__ = [
     "make_train_step",
     "make_coded_train_step",
     "make_serve_step",
     "CodedTrainingDriver",
+    "VectorizedCodedTrainer",
     "MLPModel",
     "run_adaptive",
 ]

@@ -20,6 +20,20 @@ Lambda worker's.
 The ``n`` axis is sharded over ("pod", "data") on the production mesh;
 chunk replication (the factor s+1) is the paper's computational load,
 and shows up 1:1 in the dry-run roofline compute term.
+
+**Vectorized-state master loop.**  The step generalizes past plain GC:
+any registered scheme maps its decode onto a (n, slots) weight grid via
+``scheme.chunk_grid()`` / ``chunk_slots(job)`` / ``decode_weights(jd)``
+(see ``core.schemes``), and ``num_chunks`` here overrides the
+normalization when the grid covers more than ``n`` chunks (M-SGC's
+subchunk expansion, uncoded's single column).  The end-to-end loop is
+``train.driver.VectorizedCodedTrainer``: it advances every scheme on
+the lockstep kernels' ``SchemeState`` (``scheme.step`` — no per-round
+``MiniTask`` descriptor lists), reads decodable jobs with their solved
+coefficients off ``scheme.collect_decodes``, gathers the job's batch
+into the slot view with ``data.coded_slot_batch``, and feeds one jitted
+``make_coded_train_step`` per scheme — the weighted all-reduce is the
+exact decoder for all 7 registered schemes.
 """
 
 from __future__ import annotations
@@ -61,15 +75,25 @@ def chunk_loss_sum(params, cfg: ModelConfig, chunk_batch) -> jax.Array:
 
 
 def make_coded_train_step(cfg: ModelConfig, n: int, s: int, *,
-                          lr: float = 1e-4, weight_decay: float = 0.0):
+                          lr: float = 1e-4, weight_decay: float = 0.0,
+                          num_chunks: int | None = None):
     """GC-coded train step.
 
     Inputs:
       coded_batch — pytree with leaves (n, s+1, chunk_bs, ...), the
-        cyclic replicated chunk view (``data.gc_chunked_batch``);
+        cyclic replicated chunk view (``data.gc_chunked_batch``), or
+        the scheme-generic (n, slots, chunk_bs, ...) view
+        (``data.coded_slot_batch``) — ``s+1``/``slots`` is just the
+        leaves' second axis, the step never reads ``s``;
       weights     — (n, s+1) f32, folding alpha, beta and the straggler
-        mask (see module docstring; ``gc_round_weights`` builds them).
+        mask (see module docstring; ``gc_round_weights`` builds them,
+        ``scheme.decode_weights`` in the general case).
+
+    ``num_chunks`` (default ``n``) is how many equal chunks the job's
+    batch was split into — the loss normalizer ``num_chunks * chunk_bs``
+    must equal the job's true batch size.
     """
+    total_chunks = n if num_chunks is None else num_chunks
 
     def coded_loss(params, coded_batch, weights):
         def worker_chunks(wchunks, w_i):
@@ -81,7 +105,7 @@ def make_coded_train_step(cfg: ModelConfig, n: int, s: int, *,
             coded_batch, weights
         )  # (n,)
         total_examples = (
-            n * jax.tree.leaves(coded_batch)[0].shape[2]
+            total_chunks * jax.tree.leaves(coded_batch)[0].shape[2]
         )
         return per_worker.sum() / total_examples
 

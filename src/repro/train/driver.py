@@ -14,6 +14,20 @@ Decode exactness (decoded == full-batch gradient at the snapshot) is
 asserted on demand in tests; the wall clock is simulated from the delay
 profile exactly like ``core.simulator`` so runtimes are comparable
 across schemes while the training itself is genuine.
+
+Two drivers live here:
+
+* :class:`CodedTrainingDriver` — the descriptor-path reference: it
+  materializes per-round ``MiniTask`` lists, executes each mini-task's
+  chunk gradients eagerly, and decodes via ``scheme.collect``.
+* :class:`VectorizedCodedTrainer` — the kernel-path production loop:
+  rounds advance the lockstep kernels' 1-cell ``SchemeState``
+  (``scheme.step``), decodable jobs come back with solved coefficients
+  from ``scheme.collect_decodes``, and each decode is ONE jitted
+  ``make_coded_train_step`` call on the (n, slots) replicated batch
+  view — no descriptors, no per-chunk python loop, no parameter
+  snapshots (Remark 2.1: T <= M-1 serializes each model's jobs, so
+  decode-time params equal issue-time params by construction).
 """
 
 from __future__ import annotations
@@ -302,6 +316,119 @@ def run_adaptive(
     drv2.opt = drv.opt
     coded_clock = drv2.run(rest, delays[t_probe : t_probe + rest + coded_sch.T])
     return probe_clock + coded_clock, probe_clock, cand.params, drv2
+
+
+@dataclass
+class VectorizedCodedTrainer:
+    """Kernel-path multi-model coded trainer (module docstring).
+
+    Trains ``num_models`` transformer LMs (``cfg``) concurrently on
+    deterministic ``token_batch`` streams; job-t belongs to model
+    ``(t-1) % num_models``.  The straggler gate (mu-rule + Remark-2.3
+    wait-out) and the simulated wall clock match ``core.simulator`` /
+    :class:`CodedTrainingDriver` expression-for-expression, so clocks
+    are comparable across all three.  ``batch_size`` must be divisible
+    by ``scheme.chunk_grid()[0]``.
+    """
+
+    scheme: Scheme
+    cfg: object                       # models.config.ModelConfig
+    num_models: int
+    batch_size: int = 32
+    seq_len: int = 16
+    lr: float = 1e-4
+    mu: float = 1.0
+    alpha: float = 8.0
+    seed: int = 0
+
+    def __post_init__(self):
+        from .coded import init_train_state, make_coded_train_step
+
+        sch = self.scheme
+        if sch.T > self.num_models - 1:
+            raise ValueError(
+                f"delay T={sch.T} needs at least T+1={sch.T + 1} "
+                "interleaved models (Remark 2.1)"
+            )
+        self.num_chunks, self.slots = sch.chunk_grid()
+        if self.batch_size % self.num_chunks:
+            raise ValueError(
+                f"batch_size {self.batch_size} not divisible by "
+                f"num_chunks {self.num_chunks} ({sch.name})"
+            )
+        keys = jax.random.split(
+            jax.random.PRNGKey(self.seed), self.num_models
+        )
+        states = [init_train_state(self.cfg, k) for k in keys]
+        self.params = [p for p, _ in states]
+        self.opt = [o for _, o in states]
+        self._step = jax.jit(
+            make_coded_train_step(
+                self.cfg, sch.n, getattr(sch, "s", 0),
+                lr=self.lr, num_chunks=self.num_chunks,
+            )
+        )
+        self.losses: dict[int, list] = {m: [] for m in range(self.num_models)}
+        self.job_done_time: dict[int, float] = {}
+
+    def _job_batch(self, job: int):
+        from repro.data import token_batch
+
+        return token_batch(
+            self.seed, job, self.batch_size, self.seq_len,
+            self.cfg.vocab_size,
+        )
+
+    def _apply(self, jd) -> None:
+        """Decode job ``jd`` as one jitted coded step: gather the job's
+        batch into the (n, slots) view, feed the scheme's solved decode
+        weights, update that model in place."""
+        from repro.data import coded_slot_batch
+
+        sch = self.scheme
+        coded = coded_slot_batch(
+            self._job_batch(jd.job), sch.chunk_slots(jd.job),
+            self.num_chunks,
+        )
+        w = jnp.asarray(sch.decode_weights(jd))
+        midx = (jd.job - 1) % self.num_models
+        self.params[midx], self.opt[midx], metrics = self._step(
+            self.params[midx], self.opt[midx], coded, w
+        )
+        self.losses[midx].append(float(metrics["loss"]))
+
+    def run(self, J: int, delays: np.ndarray) -> float:
+        """Run J jobs against the (>= J+T rounds, n) delay profile;
+        returns the simulated wall clock."""
+        from repro.core.straggler import ConformanceGate
+
+        sch = self.scheme
+        n = sch.n
+        rounds = J + sch.T
+        extra = (sch.normalized_load - 1.0 / n) * self.alpha
+        gate = ConformanceGate(sch.design_model, n)
+        clock = 0.0
+
+        for t in range(1, rounds + 1):
+            times = delays[t - 1] + extra
+            kappa = float(times.min())
+            cutoff = (1.0 + self.mu) * kappa
+            cand = times > cutoff
+            if not cand.any():
+                gate.force(cand)
+                clock += float(min(cutoff, times.max()))
+            else:
+                cand, waited = gate.admit_partial(cand, times)  # Remark 2.3
+                base = float(min(cutoff, times.max())) if cand.any() else cutoff
+                clock += float(max(times[waited].max(), base)) if waited else base
+
+            sch.step(t, cand)
+            for jd in sch.collect_decodes(t):
+                self._apply(jd)
+                self.job_done_time[jd.job] = clock
+        missing = [j for j in range(1, J + 1) if j not in self.job_done_time]
+        assert not missing, f"jobs unfinished: {missing[:4]}"
+        return clock
 
 
 def _tree_weighted_sum(trees, weights):

@@ -1,7 +1,14 @@
-"""Decode-vs-forward consistency: stepping a sequence token-by-token
-through ``decode_step`` must reproduce the full-sequence ``forward``
-logits (validates the KV cache, the repeat-free GQA decode einsum, RoPE
-positions, and the SSM recurrence)."""
+"""Decode consistency, two layers:
+
+* model — stepping a sequence token-by-token through ``decode_step``
+  must reproduce the full-sequence ``forward`` logits (validates the
+  KV cache, the repeat-free GQA decode einsum, RoPE positions, and the
+  SSM recurrence);
+* scheme — the clustered baselines' coefficient-bearing descriptor
+  ``collect`` must report exactly the same ``(job, round_done)`` set
+  (and decode weights) as the load-only ``collect_jobs`` fast path and
+  the batched lockstep kernels, across all 5 ``trace_library()``
+  scenarios on both backends."""
 
 import jax
 import jax.numpy as jnp
@@ -38,3 +45,88 @@ def test_decode_matches_forward(arch):
         np.asarray(dec_logits), np.asarray(full_logits),
         rtol=2e-3, atol=2e-3,
     )
+
+
+# ---------------------------------------------------------------------------
+# Scheme decode consistency: descriptor collect vs fast path vs kernels
+# ---------------------------------------------------------------------------
+
+from repro.core import (  # noqa: E402
+    make_scheme,
+    simulate,
+    simulate_fast,
+    simulate_lockstep,
+    trace_library,
+)
+
+SCHEME_N, SCHEME_J = 16, 16
+CLUSTER_SPECS = [("dc-gc", dict(C=4, s=1)), ("sb-gc", dict(C=4, s=1))]
+
+
+def _scenarios():
+    return trace_library(n=SCHEME_N, rounds=20, num_traces=1, seed=0)
+
+
+def _jd_key(jd):
+    return (
+        jd.job,
+        jd.round_done,
+        tuple(sorted((i, round(w, 9)) for i, w in jd.ell_weights.items())),
+    )
+
+
+@pytest.mark.parametrize("spec", CLUSTER_SPECS, ids=lambda s: s[0])
+@pytest.mark.parametrize("backend", ["numpy", "jax"])
+def test_clustered_paths_agree_on_trace_library(spec, backend):
+    """Legacy simulate (descriptor collect) == simulate_fast
+    (step/collect_jobs) == simulate_lockstep (batched kernel) on every
+    scenario, for both clustered baselines, on both backends."""
+    if backend == "jax":
+        pytest.importorskip("jax")
+    name, kw = spec
+    for sc in _scenarios():
+        delays = sc.delays[0]
+        legacy = simulate(
+            make_scheme(name, SCHEME_N, SCHEME_J, **kw), delays,
+            mu=1.0, alpha=sc.alpha, J=SCHEME_J,
+        )
+        fast = simulate_fast(
+            make_scheme(name, SCHEME_N, SCHEME_J, **kw), delays,
+            mu=1.0, alpha=sc.alpha, J=SCHEME_J,
+        )
+        lock = simulate_lockstep(
+            name, kw, delays[None], mu=1.0, alpha=sc.alpha, J=SCHEME_J,
+            backend=backend,
+        )[0]
+        assert legacy.job_done_round == fast.job_done_round, sc.name
+        assert legacy.job_done_round == lock.job_done_round, sc.name
+        np.testing.assert_array_equal(
+            legacy.effective_pattern, fast.effective_pattern, err_msg=sc.name
+        )
+        np.testing.assert_array_equal(
+            legacy.effective_pattern, lock.effective_pattern,
+            err_msg=sc.name,
+        )
+        assert lock.total_time == pytest.approx(legacy.total_time)
+
+
+@pytest.mark.parametrize("spec", CLUSTER_SPECS, ids=lambda s: s[0])
+def test_clustered_collect_decodes_match_descriptor_collect(spec):
+    """Replaying a scenario's admitted pattern through both protocols
+    must yield identical JobDecode contents: same (job, round_done)
+    set AND the same solved decode weights."""
+    name, kw = spec
+    for sc in _scenarios():
+        pattern = simulate(
+            make_scheme(name, SCHEME_N, SCHEME_J, **kw), sc.delays[0],
+            mu=1.0, alpha=sc.alpha, J=SCHEME_J,
+        ).effective_pattern
+        desc = make_scheme(name, SCHEME_N, SCHEME_J, **kw)
+        fast = make_scheme(name, SCHEME_N, SCHEME_J, **kw)
+        for t in range(1, pattern.shape[0] + 1):
+            desc.assign(t)
+            desc.observe(t, pattern[t - 1])
+            fast.step(t, pattern[t - 1])
+            a = sorted(_jd_key(jd) for jd in desc.collect(t))
+            b = sorted(_jd_key(jd) for jd in fast.collect_decodes(t))
+            assert a == b, (sc.name, t)

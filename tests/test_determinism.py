@@ -52,3 +52,62 @@ def test_select_parameters_deterministic_snapshot():
     b = select_parameters("m-sgc", 16, delays, grid=GRID)
     assert a.params == b.params == {"B": 1, "W": 2, "lam": 2}
     assert a.est_time == b.est_time == pytest.approx(2.360962496586253, abs=0)
+
+
+# ---------------------------------------------------------------------------
+# Clustered-baseline encode matrices (PR 6): the seed determines the
+# MATRICES, not just the loads, so the snapshots below pin the actual
+# coefficient layout the coded trainer consumes.
+# ---------------------------------------------------------------------------
+
+from repro.core import make_scheme  # noqa: E402
+
+
+def test_sbgc_seed_drawn_blocks_snapshot():
+    """sb-gc's block partition is a pure function of the seed (the
+    ``seed_sensitive`` fan-out contract of ``core/testing.py``: the
+    batch engine must run the seed axis out, not broadcast it)."""
+    from repro.core.schemes import SBGCScheme
+
+    assert SBGCScheme.seed_sensitive is True
+    a = make_scheme("sb-gc", 16, 4, C=4, s=1, seed=3)
+    b = make_scheme("sb-gc", 16, 4, C=4, s=1, seed=3)
+    # exact block draw pinned for seed 3 (n=16, C=4)
+    assert a.block_of.tolist() == [
+        0, 3, 1, 2, 1, 1, 3, 2, 3, 2, 3, 0, 0, 0, 2, 1
+    ]
+    np.testing.assert_array_equal(a.block_of, b.block_of)
+    # ... and the ENCODE MATRIX it induces is identical, entry by entry
+    np.testing.assert_array_equal(a.code.encode_matrix,
+                                  b.code.encode_matrix)
+    # rep inner at (g=4, s=1): every row carries s+1 unit coefficients
+    assert a.code.encode_matrix.sum() == 16 * 2
+    assert np.flatnonzero(a.code.encode_matrix[0]).tolist() == [0, 11]
+    # a different seed must redraw the partition
+    c = make_scheme("sb-gc", 16, 4, C=4, s=1, seed=4)
+    assert a.block_of.tolist() != c.block_of.tolist()
+
+
+def test_dcgc_reclustering_replay_determinism():
+    """dc-gc's per-round encode matrix is a pure function of (seed,
+    admitted history): replaying the same straggler rows reproduces
+    the matrices exactly, and a straggler round genuinely re-embeds."""
+    def replay():
+        sch = make_scheme("dc-gc", 16, 4, C=4, s=1, seed=3)
+        mats = []
+        row1 = np.zeros(16, dtype=bool)
+        row1[[5, 9]] = True          # NOT a worker-order prefix: the
+        rows = [row1, np.zeros(16, dtype=bool)]  # re-deal must move workers
+        for t, row in enumerate(rows, start=1):
+            sch.assign(t)
+            mats.append(sch.code.encode_matrix.copy())
+            sch.observe(t, row)
+        return mats
+
+    a, b = replay(), replay()
+    for ma, mb in zip(a, b):
+        np.testing.assert_array_equal(ma, mb)
+    # round 2 re-clusters from round 1's stragglers: different embedding
+    assert not np.array_equal(a[0], a[1])
+    # ... at identical load: every row still carries s+1 coefficients
+    assert (np.count_nonzero(a[1], axis=1) == 2).all()

@@ -1,0 +1,138 @@
+"""Exact-decode certification of the clustered GC baselines (PR-6
+tentpole): ``run_protocol`` must reconstruct the FULL gradient — not
+just survivor-count bookkeeping — for dc-gc and sb-gc, exhaustively
+over every conforming straggler pattern at small n, plus
+property-driven random conforming patterns at larger n, plus negative
+cases pinning that undecodable patterns raise errors naming the
+survivor counts."""
+
+import numpy as np
+import pytest
+from _prop import HealthCheck, given, settings, st
+
+from repro.core import make_scheme
+from repro.core.executor import conforming_pattern, run_protocol
+from repro.core.gc import ClusterGradientCode, DecodingError
+
+N, C, S, ROUNDS = 4, 2, 1, 3
+
+COMMON = dict(
+    deadline=None,
+    max_examples=15,
+    suppress_health_check=[HealthCheck.too_slow],
+)
+
+
+def _all_patterns(rounds: int, n: int):
+    total = rounds * n
+    shifts = np.arange(total)
+    for bits in range(1 << total):
+        yield ((bits >> shifts) & 1).astype(bool).reshape(rounds, n)
+
+
+@pytest.mark.parametrize("name", ["dc-gc", "sb-gc"])
+def test_exhaustive_conforming_patterns_decode_exactly(name):
+    """Every design-model-conforming pattern at n=4, C=2, s=1 over 3
+    rounds decodes every job to the exact full gradient.  For any
+    pairing into 2 clusters, 9 of the 16 rows conform (each pair may
+    lose at most one worker), so exactly 9**ROUNDS patterns pass the
+    filter — pinning the count guards the filter itself."""
+    model = make_scheme(name, N, ROUNDS, C=C, s=S).design_model
+    checked = 0
+    for pat in _all_patterns(ROUNDS, N):
+        if not model.conforms(pat):
+            continue
+        sch = make_scheme(name, N, ROUNDS, C=C, s=S)
+        decoded = run_protocol(sch, pat)  # asserts decode == truth
+        assert set(decoded) == set(range(1, ROUNDS + 1))
+        checked += 1
+    assert checked == 9 ** ROUNDS
+
+
+@given(
+    dynamic=st.booleans(),       # dc-gc vs sb-gc
+    prefer_rep=st.booleans(),
+    seed=st.integers(0, 10_000),
+)
+@settings(**COMMON)
+def test_random_conforming_patterns_decode_exactly(dynamic, prefer_rep, seed):
+    """Hypothesis-driven patterns at n=8, C=2 (cluster size 4, where
+    rep and general inner codes genuinely differ at s=1)."""
+    name = "dc-gc" if dynamic else "sb-gc"
+    sch = make_scheme(name, 8, 6, C=2, s=1, seed=seed % 7,
+                      prefer_rep=prefer_rep)
+    pat = conforming_pattern(sch.design_model, 6, 8, seed=seed,
+                            density=0.3)
+    run_protocol(sch, pat, seed=seed)
+
+
+def test_sbgc_undecodable_pattern_names_survivor_count():
+    sch = make_scheme("sb-gc", N, 1, C=C, s=S)
+    pat = np.zeros((1, N), dtype=bool)
+    pat[0, np.flatnonzero(sch.block_of == 0)] = True  # kill block 0
+    with pytest.raises(AssertionError, match=r"kept 0 of 2 survivors"):
+        run_protocol(sch, pat)
+
+
+def test_dcgc_undecodable_pattern_names_survivor_count():
+    # round-1 deal from an all-clear history is the identity layout
+    # worker i -> cluster i % C, so {0, 2} is cluster 0
+    sch = make_scheme("dc-gc", N, 1, C=C, s=S)
+    pat = np.zeros((1, N), dtype=bool)
+    pat[0, [0, 2]] = True
+    with pytest.raises(AssertionError, match=r"kept 0 of 2 survivors"):
+        run_protocol(sch, pat)
+
+
+# ---------------------------------------------------------------------------
+# ClusterGradientCode unit coverage (the encode-matrix layer itself)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("prefer_rep", [True, False])
+def test_cluster_code_decode_identity_all_survivor_sets(prefer_rep):
+    """For every survivor set losing <= s per cluster, the decode
+    vector satisfies the exact-decode identity B.T @ beta == 1."""
+    cid = np.array([0, 1, 0, 1, 0, 1])  # two interleaved clusters of 3
+    code = ClusterGradientCode(cid, 1, prefer_rep=prefer_rep, seed=2)
+    n = code.n
+    for bits in range(1 << n):
+        surv = np.array([(bits >> i) & 1 for i in range(n)], dtype=bool)
+        ok = all(
+            (~surv[np.flatnonzero(cid == c)]).sum() <= 1 for c in range(2)
+        )
+        if not ok:
+            continue
+        beta = code.decode_vector(np.flatnonzero(surv))
+        assert (beta[~surv] == 0).all()
+        np.testing.assert_allclose(
+            code.encode_matrix.T @ beta, np.ones(n), atol=1e-6
+        )
+
+
+def test_cluster_code_embeds_inner_on_members():
+    cid = np.array([1, 0, 1, 0])
+    code = ClusterGradientCode(cid, 1, seed=0)
+    B = code.encode_matrix
+    for c in range(2):
+        m = np.flatnonzero(cid == c)
+        np.testing.assert_array_equal(
+            B[np.ix_(m, m)], code.inner.encode_matrix
+        )
+    # rows touch only the worker's own cluster's chunks
+    for i in range(4):
+        assert set(np.flatnonzero(B[i])) <= set(np.flatnonzero(cid == cid[i]))
+        assert set(code.chunks_of_worker(i)) == set(np.flatnonzero(B[i]))
+
+
+def test_cluster_code_decode_error_names_counts():
+    code = ClusterGradientCode(np.array([0, 1, 0, 1]), 1)
+    with pytest.raises(DecodingError, match=r"cluster 0: 0 of 2 survivors"):
+        code.decode_vector([1, 3])  # both cluster-0 members lost
+
+
+def test_cluster_code_rejects_bad_shapes():
+    with pytest.raises(ValueError, match="equal-sized"):
+        ClusterGradientCode(np.array([0, 0, 0, 1]), 0)
+    with pytest.raises(ValueError):
+        ClusterGradientCode(np.array([0, 1, 0, 1]), 2)  # s >= cluster size
