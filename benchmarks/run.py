@@ -9,6 +9,7 @@ reproducible offline; relative orderings are the reproduction target.
   PYTHONPATH=src python -m benchmarks.run             # everything
   PYTHONPATH=src python -m benchmarks.run table1       # one benchmark
   PYTHONPATH=src python -m benchmarks.run --json ...   # + BENCH_*.json
+  PYTHONPATH=src python -m benchmarks.run --list       # registered benches
 
 ``--json`` additionally writes one machine-readable
 ``BENCH_<name>.json`` per benchmark (parsed metric lines, wall time,
@@ -44,6 +45,12 @@ N_WORKERS = 256
 J_TOTAL = 480
 MU = 1.0
 SEED = 0
+
+# measured-vs-analytic wall-clock tolerance for the dist-exec gates:
+# real processes only ever run SLOW of the analytic clock (IPC, pickle,
+# scheduler jitter), and at time_scale=0.02 the observed overhead is
+# 5-15%; 35% keeps the gate meaningful yet robust on loaded CI hosts
+DIST_EXEC_TOL = 0.35
 
 # GE chain calibrated to Fig. 1: ~4-5% stragglers, short bursts (mean
 # ~1.2 rounds), heavy right tail on completion times.
@@ -778,6 +785,101 @@ def bench_coded_train(n: int = 8, models: int = 4, jobs: int = 24,
         print("codedtrain.status,1,smoke (reduced jobs/models)")
 
 
+def bench_dist_exec(n=8, jobs=16, time_scale=0.02, smoke=False):
+    """§Harness: REAL master/worker rounds vs the analytic clock.
+
+    Spawns ``n`` real worker processes (``repro.dist``), runs GC and
+    M-SGC end to end on an injected GE-bursty trace (workers enact
+    their planned delays before reporting, the master applies the
+    mu-rule + Remark-2.3 gate on wall clock), and gates:
+
+    1. the recorded straggler pattern replays BIT-IDENTICALLY through
+       ``simulate_fast`` on the same trace (same gate decisions);
+    2. every job decodes exactly (max |err| vs the full-batch gradient);
+    3. measured wall-clock makespan agrees with the analytic clock
+       within ``DIST_EXEC_TOL`` relative (measured carries real IPC +
+       scheduling overhead, so it only ever runs slow);
+    4. M-SGC's measured makespan <= GC's — the Table-1 ordering holds
+       on real processes, not just in simulation;
+    5. an injected message drop is recovered by the retry path.
+
+    The ``dist-exec-smoke`` tier-1 variant shrinks to 4 workers.
+    """
+    from repro.core.straggler import trace_library
+    from repro.dist import FaultSpec, HarnessConfig, run_harness
+
+    src = GilbertElliotSource(n=n, seed=SEED, p_ns=0.09, p_sn=0.5,
+                              slow_factor=6.0, jitter=0.05)
+    delays = src.sample_delays(jobs + 8)
+    alpha = src.alpha
+    # lam == n puts M-SGC in the Remark-3.2 regime: load (W-1+B)/(n(W-1))
+    # < GC's (s+1)/n, so the ordering gate measures a real load gap
+    schemes = [("gc", {"s": 1}), ("m-sgc", {"B": 1, "W": 3, "lam": n})]
+
+    measured = {}
+    for name, params in schemes:
+        cfg = HarnessConfig(alpha=alpha, time_scale=time_scale, seed=SEED)
+        res = run_harness(name, n, jobs, delays, params=params, config=cfg)
+        assert not res.aborted, (name, res.abort_reason)
+        sim = simulate_fast(make_scheme(name, n, jobs, **params), delays,
+                            mu=MU, alpha=alpha, J=jobs)
+        assert np.array_equal(res.trace_model.pattern,
+                              sim.effective_pattern), (
+            f"{name}: recorded pattern does not replay through "
+            "simulate_fast"
+        )
+        assert np.allclose(res.analytic_round_times,
+                           sim.round_times * time_scale), name
+        assert res.decode_max_err < 1e-8, (name, res.decode_max_err)
+        assert abs(res.agreement - 1.0) <= DIST_EXEC_TOL, (
+            f"{name}: measured/analytic = {res.agreement:.3f} outside "
+            f"±{DIST_EXEC_TOL}"
+        )
+        measured[name] = res.measured_makespan
+        print(f"distexec.{name}.measured_s,{res.measured_makespan:.3f},"
+              f"wall clock over {n} worker processes")
+        print(f"distexec.{name}.analytic_s,{res.analytic_makespan:.3f},"
+              f"simulate_fast clock x time_scale={time_scale}")
+        print(f"distexec.{name}.agreement,{res.agreement:.3f},"
+              f"measured/analytic (gate: within ±{DIST_EXEC_TOL})")
+        print(f"distexec.{name}.decode_max_err,{res.decode_max_err:.2e},"
+              "max |decoded - full-batch gradient|")
+        print(f"distexec.{name}.waitouts,{res.waitouts},"
+              f"retries={res.retries} deaths={len(res.deaths)}")
+    assert measured["m-sgc"] <= measured["gc"], (
+        "M-SGC measured makespan must not exceed GC's: "
+        f"{measured['m-sgc']:.3f} vs {measured['gc']:.3f}"
+    )
+    gain = 1.0 - measured["m-sgc"] / measured["gc"]
+    print(f"distexec.msgc_vs_gc_gain,{gain:.4f},measured-makespan gain")
+
+    # retry path: one worker drops its first-attempt result once
+    drop_jobs = 4 if smoke else 6
+    cfg = HarnessConfig(
+        alpha=alpha, time_scale=time_scale, seed=SEED, round_timeout=0.3,
+        faults={0: FaultSpec(drop_rounds=frozenset({2}))},
+    )
+    res = run_harness("gc", n, drop_jobs, delays, params={"s": 1},
+                      config=cfg)
+    assert not res.aborted, res.abort_reason
+    assert res.retries >= 1, "dropped message must trigger a resend"
+    assert len(res.decoded_jobs) == drop_jobs
+    print(f"distexec.drop.retries,{res.retries},"
+          "resends recovering an injected message drop")
+
+    if not smoke:
+        # the checked-in recorded-harness scenario replays what a run
+        # like this recorded (provenance for the trace library)
+        rec = [sc for sc in trace_library(n=n, rounds=jobs, num_traces=1,
+                                          seed=SEED)
+               if sc.name == "recorded-harness"]
+        assert rec, "recorded-harness scenario missing from the library"
+        print(f"distexec.recorded_scenario,1,"
+              f"library replay shape {rec[0].delays.shape}")
+    else:
+        print("distexec.status,1,smoke (4 workers, reduced jobs)")
+
+
 def bench_roofline():
     """§Roofline: three terms per (arch, shape, mesh) from the dry-run."""
     from . import roofline
@@ -823,8 +925,23 @@ BENCHES = {
     "coded-train-smoke": lambda: bench_coded_train(
         n=8, models=2, jobs=8, smoke=True
     ),
+    "dist-exec": bench_dist_exec,
+    "dist-exec-smoke": lambda: bench_dist_exec(
+        n=4, jobs=6, smoke=True
+    ),
     "roofline": bench_roofline,
 }
+
+
+def _bench_description(name: str, fn) -> str:
+    """One-line description for ``--list``: the first docstring line,
+    or the smoke-variant convention for the lambda wrappers."""
+    doc = (fn.__doc__ or "").strip()
+    if doc:
+        return doc.splitlines()[0]
+    if name.endswith("-smoke"):
+        return f"tier-1 smoke variant of '{name[:-len('-smoke')]}'"
+    return "(no description)"
 
 
 class _Tee(io.StringIO):
@@ -875,6 +992,11 @@ def _write_json(name: str, seconds: float, status: str, text: str,
 
 def main() -> None:
     args = sys.argv[1:]
+    if "--list" in args:
+        width = max(len(name) for name in BENCHES)
+        for name, fn in BENCHES.items():
+            print(f"{name:<{width}}  {_bench_description(name, fn)}")
+        return
     json_mode = "--json" in args
     # the -smoke variants are tier-1 stand-ins for their full benches;
     # a no-name invocation (the nightly sweep) runs only the full ones

@@ -101,6 +101,7 @@ from .straggler import (
     TraceSource,
     WindowwiseOr,
     fit_gilbert_elliot,
+    load_recorded_harness,
     suggest_parameters,
     trace_library,
 )
@@ -134,6 +135,7 @@ __all__ = [
     "LambdaTraceGenerator",
     "Scenario",
     "trace_library",
+    "load_recorded_harness",
     "fit_gilbert_elliot",
     "suggest_parameters",
     "load_gc",

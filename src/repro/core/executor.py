@@ -19,7 +19,7 @@ import numpy as np
 from .schemes import JobDecode, MSGCScheme, Scheme
 from .straggler import ConformanceGate, StragglerModel
 
-__all__ = ["run_protocol", "conforming_pattern"]
+__all__ = ["run_protocol", "conforming_pattern", "decode_from_results"]
 
 
 def run_protocol(
@@ -73,7 +73,7 @@ def run_protocol(
                 results[("d1", mt.job, mt.chunk)] = partials[mt.job, mt.chunk]
         scheme.observe(t, strag)
         for jd in scheme.collect(t):
-            decoded[jd.job] = _decode(scheme, jd, results)
+            decoded[jd.job] = decode_from_results(scheme, jd, results)
             np.testing.assert_allclose(
                 decoded[jd.job], truth[jd.job], atol=atol,
                 err_msg=f"job {jd.job} decode mismatch",
@@ -85,8 +85,15 @@ def run_protocol(
     return decoded
 
 
-def _decode(scheme: Scheme, jd: JobDecode, results: dict) -> np.ndarray:
-    if jd.ell_weights:  # GC / SR-SGC
+def decode_from_results(
+    scheme: Scheme, jd: JobDecode, results: dict
+) -> np.ndarray:
+    """Reconstruct job ``jd.job``'s full gradient from per-task result
+    vectors keyed executor-style (``("ell", job, worker)`` /
+    ``("d1", job, chunk)`` / ``("d2", job, m, worker)``).  Shared by the
+    in-process protocol check above and the ``repro.dist`` master, which
+    feeds it vectors computed by real worker processes."""
+    if jd.ell_weights:  # GC / SR-SGC / clustered
         return sum(
             w * results[("ell", jd.job, i)] for i, w in jd.ell_weights.items()
         )

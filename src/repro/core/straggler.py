@@ -30,7 +30,9 @@ NumPy reductions instead of nested Python loops.
 
 from __future__ import annotations
 
+import json
 from dataclasses import dataclass
+from pathlib import Path
 
 import numpy as np
 
@@ -52,6 +54,7 @@ __all__ = [
     "LambdaTraceGenerator",
     "Scenario",
     "trace_library",
+    "load_recorded_harness",
     "fit_gilbert_elliot",
     "suggest_parameters",
 ]
@@ -1195,6 +1198,10 @@ class TraceModel:
     jitter: float = 0.05
     compute_scale: float = 8.0
     seed: int = 0
+    #: optional measured per-(round, worker) wall-clock seconds from a
+    #: real harness run (NaN where no result arrived); carried for
+    #: provenance/validation, never consulted by ``sample_delays``
+    timings: np.ndarray | None = None
 
     @property
     def n(self) -> int:
@@ -1219,6 +1226,69 @@ class TraceModel:
         )
         slow = 1.0 + (self.slow_factor - 1.0) * rng.random((rounds, self.n))
         return np.where(pat, base * np.maximum(slow, 1.0), base)
+
+    # -- stable JSON recording schema (version 1) ------------------------
+    #
+    #   {"kind": "trace-model", "version": 1, "n", "rounds",
+    #    "stragglers": [[worker ids straggling in round t], ...],
+    #    "base_time", "slow_factor", "jitter", "compute_scale", "seed",
+    #    "timings": null | [[seconds-or-null per worker], ...]}
+    #
+    # Straggler rows are id lists (patterns are sparse); timings use
+    # null for NaN (JSON has no NaN).  ``from_json(to_json())`` is exact.
+
+    def to_json(self, *, indent: int | None = None) -> str:
+        """Serialize the recording (see the schema comment above)."""
+        pat = np.asarray(self.pattern, dtype=bool)
+        timings = None
+        if self.timings is not None:
+            tim = np.asarray(self.timings, dtype=np.float64)
+            timings = [
+                [None if np.isnan(v) else float(v) for v in row]
+                for row in tim
+            ]
+        return json.dumps({
+            "kind": "trace-model",
+            "version": 1,
+            "n": int(pat.shape[1]),
+            "rounds": int(pat.shape[0]),
+            "stragglers": [np.flatnonzero(row).tolist() for row in pat],
+            "base_time": float(self.base_time),
+            "slow_factor": float(self.slow_factor),
+            "jitter": float(self.jitter),
+            "compute_scale": float(self.compute_scale),
+            "seed": int(self.seed),
+            "timings": timings,
+        }, indent=indent)
+
+    @classmethod
+    def from_json(cls, text: str) -> "TraceModel":
+        """Inverse of :meth:`to_json` (exact round-trip)."""
+        obj = json.loads(text)
+        if obj.get("kind") != "trace-model" or obj.get("version") != 1:
+            raise ValueError(
+                f"not a v1 trace-model recording: kind={obj.get('kind')!r} "
+                f"version={obj.get('version')!r}"
+            )
+        rounds, n = int(obj["rounds"]), int(obj["n"])
+        pat = np.zeros((rounds, n), dtype=bool)
+        for t, ids in enumerate(obj["stragglers"]):
+            pat[t, ids] = True
+        timings = obj.get("timings")
+        if timings is not None:
+            timings = np.asarray([
+                [np.nan if v is None else float(v) for v in row]
+                for row in timings
+            ], dtype=np.float64)
+        return cls(
+            pattern=pat,
+            base_time=float(obj["base_time"]),
+            slow_factor=float(obj["slow_factor"]),
+            jitter=float(obj["jitter"]),
+            compute_scale=float(obj["compute_scale"]),
+            seed=int(obj["seed"]),
+            timings=timings,
+        )
 
 
 @dataclass
@@ -1298,6 +1368,46 @@ class LambdaTraceGenerator:
         return out
 
 
+_RECORDINGS_DIR = Path(__file__).resolve().parent / "recordings"
+
+
+def load_recorded_harness(
+    name: str = "harness-ge-bursty",
+    *,
+    n: int | None = None,
+    rounds: int | None = None,
+) -> TraceModel:
+    """Load a checked-in harness recording (JSON written by
+    ``repro.dist``'s ``RunLedger.to_trace_model().to_json()``) from
+    ``src/repro/core/recordings/``.
+
+    With ``n``/``rounds`` given, the recorded pattern tiles cyclically
+    (rows like :meth:`TraceModel.sample_pattern`, columns likewise) to
+    the requested fleet shape; the measured ``timings`` are kept only at
+    the recording's native shape (they describe specific workers)."""
+    path = _RECORDINGS_DIR / f"{name}.json"
+    model = TraceModel.from_json(path.read_text())
+    pat = np.asarray(model.pattern, dtype=bool)
+    reshaped = False
+    if rounds is not None and rounds != pat.shape[0]:
+        pat = model.sample_pattern(rounds)
+        reshaped = True
+    if n is not None and n != pat.shape[1]:
+        reps = -(-n // pat.shape[1])
+        pat = np.tile(pat, (1, reps))[:, :n]
+        reshaped = True
+    if not reshaped:
+        return model
+    return TraceModel(
+        pattern=pat,
+        base_time=model.base_time,
+        slow_factor=model.slow_factor,
+        jitter=model.jitter,
+        compute_scale=model.compute_scale,
+        seed=model.seed,
+    )
+
+
 @dataclass(frozen=True)
 class Scenario:
     """One named entry of the straggler trace library: a stack of
@@ -1331,7 +1441,11 @@ def trace_library(
       matching **per-worker alpha vector** (heterogeneous load slope);
     * ``replayed-waves`` — :class:`TraceModel` replaying a recorded
       diagonal-wave pattern (two adjacent stragglers sweeping the
-      fleet), the adversarial-but-structured case cluster logs show.
+      fleet), the adversarial-but-structured case cluster logs show;
+    * ``recorded-harness`` — :class:`TraceModel` replaying the
+      checked-in pattern a real ``repro.dist`` master/worker run
+      recorded (see :func:`load_recorded_harness`), tiled cyclically to
+      the requested fleet.
     """
 
     def _stack(mk):
@@ -1363,6 +1477,12 @@ def trace_library(
         wave[t, (2 * t) % n] = wave[t, (2 * t + 1) % n] = True
     wave0 = TraceModel(wave, seed=seed + 4)
     waves = _stack(lambda k: TraceModel(wave, seed=seed + 10 * k + 4))
+    rec0 = load_recorded_harness(n=n, rounds=rounds)
+    recorded = _stack(lambda k: TraceModel(
+        rec0.pattern, base_time=rec0.base_time,
+        slow_factor=rec0.slow_factor, jitter=rec0.jitter,
+        compute_scale=rec0.compute_scale, seed=seed + 10 * k + 5,
+    ))
     # the GE source's calibrated slope; the Lambda/replay scenarios
     # read their own generators' .alpha so a retuned compute scale can
     # never drift from the delays it synthesized
@@ -1378,6 +1498,8 @@ def trace_library(
                  "lognormal worker speeds, per-worker alpha"),
         Scenario("replayed-waves", waves, wave0.alpha,
                  "recorded diagonal-wave pattern replay"),
+        Scenario("recorded-harness", recorded, rec0.alpha,
+                 "real master/worker harness recording replay"),
     ]
 
 

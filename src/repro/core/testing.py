@@ -46,6 +46,7 @@ __all__ = [
     "unregister_testing_schemes",
     "register_fragile_gc",
     "unregister_fragile_gc",
+    "dead_worker_delays",
 ]
 
 
@@ -74,6 +75,26 @@ def assert_sim_parity(ref, got, *, exact: bool = True) -> None:
         assert sorted(ref.job_done_time) == sorted(got.job_done_time)
         for j, v in ref.job_done_time.items():
             assert np.isclose(v, got.job_done_time[j])
+
+def dead_worker_delays(
+    delays: np.ndarray,
+    worker: int,
+    from_round: int,
+    *,
+    factor: float = 1e6,
+) -> np.ndarray:
+    """Trace transform for the permanent-worker-death contract: from
+    1-based round ``from_round`` on, ``worker``'s reference delay is
+    inflated by ``factor`` — how the simulators see what the ``repro.dist``
+    harness observes when a worker process dies for good.  Every engine
+    (numpy or jax, fast path or descriptor path) must then show that
+    worker as an always-straggler row from ``from_round`` while decode
+    of the surviving rows stays intact, for as long as the scheme's
+    gate admits the row."""
+    out = np.array(delays, dtype=np.float64, copy=True)
+    out[from_round - 1:, worker] += factor
+    return out
+
 
 SEEDED_UNCODED = "seeded-uncoded"
 

@@ -1,0 +1,38 @@
+"""Real distributed execution harness: master/worker coded rounds with
+fault injection and measured telemetry.
+
+See ``docs/scheme_kernels.md`` ("Real execution harness") for the
+transport contract, timeout/retry semantics, injection knobs, and the
+telemetry -> ``TraceModel`` recording schema.
+"""
+
+from .injection import FaultSpec, enact_delay
+from .master import (
+    HarnessConfig,
+    HarnessError,
+    HarnessResult,
+    run_harness,
+)
+from .telemetry import RoundRecord, RunLedger, WorkerRoundStat
+from .transport import WorkerLink, start_workers, stop_workers, wait_any
+from .worker import TaskComputer, WorkerSetup, linear_job_data, worker_main
+
+__all__ = [
+    "FaultSpec",
+    "enact_delay",
+    "HarnessConfig",
+    "HarnessError",
+    "HarnessResult",
+    "run_harness",
+    "RoundRecord",
+    "RunLedger",
+    "WorkerRoundStat",
+    "WorkerLink",
+    "start_workers",
+    "stop_workers",
+    "wait_any",
+    "TaskComputer",
+    "WorkerSetup",
+    "linear_job_data",
+    "worker_main",
+]

@@ -1,0 +1,51 @@
+"""Worker-side fault injection for the distributed harness.
+
+The master *enacts* a straggler trace instead of merely simulating it:
+each round message carries the worker's planned delay (seconds, already
+scaled to wall clock), and the worker burns that time before reporting —
+either asleep (``sleep``, cheap on CI) or spinning (``spin``, the
+``loop()`` idiom from the MPI coded-matmul harnesses, closer to a worker
+that is genuinely busy).  Static knobs live in :class:`FaultSpec`:
+
+* ``drop_rounds`` — first-attempt result messages for these rounds are
+  computed but never sent (lost on the wire); the master's timeout /
+  resend path recovers them on the retry attempt.
+* ``kill_after`` — the worker process exits cleanly right after
+  reporting this round, modelling a permanently lost worker; the master
+  degrades it to an always-straggler row.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+
+
+@dataclass(frozen=True)
+class FaultSpec:
+    """Static fault knobs for one worker (per-round delays arrive in the
+    round messages, derived from the enacted trace)."""
+
+    delay_mode: str = "sleep"            # "sleep" | "spin"
+    drop_rounds: frozenset = field(default_factory=frozenset)
+    kill_after: int | None = None        # exit after reporting round k
+
+    def drops(self, t: int, attempt: int) -> bool:
+        return attempt == 0 and t in self.drop_rounds
+
+    def dies_after(self, t: int) -> bool:
+        return self.kill_after is not None and t >= self.kill_after
+
+
+def enact_delay(seconds: float, mode: str = "sleep") -> None:
+    """Burn ``seconds`` of wall clock: ``sleep`` yields the CPU, ``spin``
+    busy-waits on the monotonic clock (the MPI harnesses' ``loop()``)."""
+    if seconds <= 0.0:
+        return
+    if mode == "spin":
+        deadline = time.perf_counter() + seconds
+        x = 1.0000001
+        while time.perf_counter() < deadline:
+            x = x * 1.0000001 % 7.0  # keep the ALU honest
+    else:
+        time.sleep(seconds)

@@ -1,0 +1,421 @@
+"""Master loop: real coded rounds over worker processes.
+
+``run_harness`` enacts a straggler trace end-to-end: each round it
+ships every worker its mini-task items (chunk ids + encode-matrix
+coefficients from the scheme's ``assign``/``code`` surface — the same
+matrices ``executor.run_protocol`` certifies) together with the
+worker's planned delay, then applies the paper's master protocol on
+REAL wall clock:
+
+* mu-rule: the planned per-round times ``delays[t-1] + (L - 1/n) *
+  alpha`` give the candidate stragglers ``times > (1 + mu) * kappa`` —
+  expression-for-expression the ``simulate_fast`` / trainer loop, so
+  the recording replays bit-identically through the simulator;
+* Remark-2.3 selective wait-out via the stateful ``ConformanceGate``:
+  waited-out workers are genuinely waited for (their real results
+  arrive and enter the decode), non-admitted stragglers' work is
+  cancelled (the worker abandons the round when the next one arrives);
+* decode via ``scheme.collect`` — GC/SR-SGC beta vectors, M-SGC group
+  weights, ``ClusterGradientCode.decode_vector`` for the clustered
+  baselines — numerically checked against the job's full-batch
+  gradient when ``check_decode`` is on.
+
+Robustness: per-worker round timeouts with bounded resends (lost
+messages recover from the worker's result cache), and permanent-death
+degradation — a worker that stops responding becomes an always-
+straggler row, and the run continues for as long as the gate admits
+that row; if the gate would have to wait out a dead worker the run
+aborts gracefully (``HarnessResult.aborted``) instead of hanging.
+
+The measured round duration honors the protocol's information
+constraints: the master cannot proceed before the mu-rule deadline in
+any round with candidates (it could not *know* who straggles earlier),
+and otherwise proceeds when the last needed result lands.
+"""
+
+from __future__ import annotations
+
+import copy
+import time
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.core.executor import decode_from_results
+from repro.core.schemes import MSGCScheme, Scheme, make_scheme
+from repro.core.straggler import ConformanceGate
+from repro.data.synthetic import chunk_boundaries
+
+from .injection import FaultSpec
+from .telemetry import RunLedger
+from .transport import WorkerLink, start_workers, stop_workers, wait_any
+from .worker import TaskComputer, WorkerSetup, worker_main
+
+
+class HarnessError(RuntimeError):
+    """Unrecoverable protocol failure (e.g. the gate requires a result
+    from a permanently dead worker)."""
+
+
+@dataclass
+class HarnessConfig:
+    """Knobs for one harness run (see module docstring)."""
+
+    mu: float = 1.0
+    alpha: object = 8.0                 # scalar or per-worker (n,)
+    time_scale: float = 0.05            # planned seconds -> wall seconds
+    delay_mode: str = "sleep"           # "sleep" | "spin"
+    round_timeout: float | None = None  # None: auto from planned times
+    max_retries: int = 1
+    compute: str = "linear"             # "linear" | "grad"
+    dim: int = 8
+    num_rows: int | None = None
+    check_decode: bool = True
+    decode_atol: float = 1e-6
+    seed: int = 0
+    faults: dict = field(default_factory=dict)   # worker -> FaultSpec
+    start_method: str = "spawn"
+    model_cfg: object = None            # grad mode only
+    batch_size: int = 0
+    seq_len: int = 8
+
+
+@dataclass
+class HarnessResult:
+    scheme: str
+    n: int
+    J: int
+    time_scale: float
+    measured_makespan: float
+    analytic_makespan: float
+    round_times: np.ndarray             # measured seconds per round
+    analytic_round_times: np.ndarray    # planned-model seconds (scaled)
+    ledger: RunLedger
+    trace_model: object                 # TraceModel recording
+    decoded_jobs: dict                  # job -> round decoded
+    job_done_time: dict                 # job -> measured elapsed seconds
+    decode_max_err: float
+    deaths: list
+    retries: int
+    waitouts: int
+    aborted: bool = False
+    abort_reason: str | None = None
+
+    @property
+    def agreement(self) -> float:
+        """Measured / analytic makespan (1.0 = perfect agreement)."""
+        if self.analytic_makespan <= 0:
+            return float("nan")
+        return self.measured_makespan / self.analytic_makespan
+
+
+# ---------------------------------------------------------------------------
+# work-item construction (MiniTask -> executor-keyed chunk combination)
+# ---------------------------------------------------------------------------
+
+
+def _item_for(sch: Scheme, mt) -> dict | None:
+    if mt.trivial:
+        return None
+    if mt.kind == "ell":
+        row = sch.code.encode_matrix[mt.worker]
+        sup = np.flatnonzero(row)
+        return {
+            "key": ("ell", mt.job, mt.worker),
+            "job": mt.job,
+            "chunks": [int(c) for c in sup],
+            "coeffs": [float(x) for x in row[sup]],
+        }
+    if mt.kind in ("d1", "all"):
+        return {
+            "key": ("d1", mt.job, mt.chunk),
+            "job": mt.job,
+            "chunks": [int(mt.chunk)],
+            "coeffs": [1.0],
+        }
+    if mt.kind == "d2":
+        m = mt.chunk
+        base = (sch.W - 1) * sch.n + m * sch.n
+        row = sch.code.encode_matrix[mt.worker]
+        loc = np.flatnonzero(row)
+        return {
+            "key": ("d2", mt.job, m, mt.worker),
+            "job": mt.job,
+            "chunks": [int(base + c) for c in loc],
+            "coeffs": [float(x) for x in row[loc]],
+        }
+    raise ValueError(f"unknown mini-task kind {mt.kind!r}")
+
+
+def _chunk_fractions(sch: Scheme) -> list[float]:
+    if isinstance(sch, MSGCScheme):
+        return [sch.chunk_fraction(c) for c in range(sch.num_chunks)]
+    return [1.0 / sch.n] * sch.n
+
+
+def _decide(gate: ConformanceGate, cand: np.ndarray,
+            cost: np.ndarray) -> tuple[np.ndarray, list[int]]:
+    """Provisional Remark-2.3 decision on a gate copy (committed for
+    real only once the round's deaths are settled)."""
+    if not cand.any():
+        return cand.copy(), []
+    return copy.deepcopy(gate).admit_partial(cand.copy(), cost)
+
+
+def _await_ready(links: list[WorkerLink], timeout: float) -> None:
+    """Block until every worker sent its readiness handshake (or died,
+    or ``timeout`` passed) so spawn/import start-up cost never counts
+    against round timeouts or round-1 measurement."""
+    deadline = time.perf_counter() + timeout
+    pending = set(range(len(links)))
+    while pending and time.perf_counter() < deadline:
+        wait_any([links[i] for i in pending], timeout=0.1)
+        for i in list(pending):
+            lk = links[i]
+            while (msg := lk.try_recv()) is not None:
+                if msg.get("kind") == "ready":
+                    pending.discard(i)
+            if not lk.alive():
+                pending.discard(i)  # round loop will mark it dead
+
+
+def _analytic_duration(times: np.ndarray, cutoff: float, tmax: float,
+                       cand: np.ndarray, eff: np.ndarray,
+                       waited: list[int]) -> float:
+    """The simulator's round-duration expression on planned times."""
+    if not cand.any():
+        return float(min(cutoff, tmax))
+    if waited:
+        base = float(min(cutoff, tmax)) if eff.any() else cutoff
+        return float(max(times[waited].max(), base))
+    return float(min(cutoff, tmax))
+
+
+# ---------------------------------------------------------------------------
+# the master loop
+# ---------------------------------------------------------------------------
+
+
+def run_harness(
+    scheme_name: str,
+    n: int,
+    J: int,
+    delays: np.ndarray,
+    *,
+    params: dict | None = None,
+    config: HarnessConfig | None = None,
+) -> HarnessResult:
+    """Run ``J`` jobs of ``scheme_name`` over ``n`` real worker
+    processes, enacting ``delays`` ((>= J+T rounds, n) planned seconds
+    at reference load); returns measured + analytic telemetry."""
+    cfg = config or HarnessConfig()
+    sch = make_scheme(scheme_name, n, J, **(params or {}))
+    rounds = J + sch.T
+    delays = np.asarray(delays, dtype=np.float64)
+    if delays.shape[0] < rounds or delays.shape[1] != n:
+        raise ValueError(
+            f"need delays (>={rounds}, {n}), got {delays.shape}"
+        )
+    extra = (sch.normalized_load - 1.0 / n) * np.asarray(cfg.alpha)
+    planned = delays[:rounds] + extra       # broadcasts (n,) alpha
+
+    num_chunks = sch.num_chunks if isinstance(sch, MSGCScheme) else n
+    num_rows = cfg.num_rows or max(4 * num_chunks, 64)
+    if cfg.compute == "grad":
+        num_rows = cfg.batch_size
+    bounds = tuple(chunk_boundaries(num_rows, _chunk_fractions(sch)))
+
+    def setup_for(wid: int) -> WorkerSetup:
+        return WorkerSetup(
+            worker_id=wid, seed=cfg.seed, compute=cfg.compute,
+            dim=cfg.dim, num_rows=num_rows, bounds=bounds,
+            fault=cfg.faults.get(wid, FaultSpec(delay_mode=cfg.delay_mode)),
+            model_cfg=cfg.model_cfg, batch_size=cfg.batch_size,
+            seq_len=cfg.seq_len,
+        )
+
+    truth = TaskComputer(
+        cfg.seed, cfg.compute, cfg.dim, num_rows, bounds,
+        model_cfg=cfg.model_cfg, batch_size=cfg.batch_size,
+        seq_len=cfg.seq_len,
+    ) if cfg.check_decode else None
+
+    gate = ConformanceGate(sch.design_model, n)
+    ledger = RunLedger(n=n, time_scale=cfg.time_scale)
+    results: dict = {}
+    decoded_jobs: dict[int, int] = {}
+    job_done_time: dict[int, float] = {}
+    decode_max_err = 0.0
+    dead = np.zeros(n, dtype=bool)
+    measured = np.zeros(rounds)
+    analytic = np.zeros(rounds)
+    aborted, abort_reason = False, None
+
+    links = start_workers(n, worker_main, setup_for,
+                          start_method=cfg.start_method)
+    try:
+        _await_ready(links, timeout=120.0)
+        for t in range(1, rounds + 1):
+            for lk in links:        # stale replies from cancelled work
+                lk.drain()
+            tasks = sch.assign(t)
+            by_worker: dict[int, list] = {i: [] for i in range(n)}
+            for mt in tasks:
+                item = _item_for(sch, mt)
+                if item is not None:
+                    by_worker[mt.worker].append(item)
+
+            times = planned[t - 1]
+            kappa = float(times.min())
+            cutoff = (1.0 + cfg.mu) * kappa
+            tmax = float(times.max())
+            base_cand = times > cutoff
+            timeout = cfg.round_timeout
+            if timeout is None:
+                timeout = tmax * cfg.time_scale * 1.5 + 0.25
+
+            t0 = time.perf_counter()
+            rec = ledger.new_round(t, t0)
+            rec.planned_row = base_cand.copy()
+            last_send = np.full(n, t0)
+            round_values: dict[int, list] = {}
+            for i in range(n):
+                if dead[i]:
+                    continue
+                ok = links[i].send({
+                    "kind": "round", "t": t, "attempt": 0,
+                    "items": by_worker[i],
+                    "delay_s": float(times[i]) * cfg.time_scale,
+                })
+                rec.stats[i].sent = time.perf_counter()
+                rec.stats[i].attempts = 1
+                if not ok and not dead[i]:
+                    dead[i] = True
+                    rec.deaths.append(i)
+
+            # -- wait loop: gather needed results, retry, degrade -----
+            while True:
+                cand = base_cand | dead
+                cost = np.where(dead, np.inf, times)
+                eff, waited = _decide(gate, cand, cost)
+                bad = [w for w in waited if dead[w]]
+                if bad:
+                    raise HarnessError(
+                        f"round {t}: gate must wait out dead "
+                        f"worker(s) {bad} — pattern inadmissible"
+                    )
+                needed = [i for i in range(n)
+                          if not eff[i] and not dead[i]]
+                pending = [i for i in needed if i not in round_values]
+                if not pending:
+                    break
+                wait_any([links[i] for i in pending], timeout=0.02)
+                for i in range(n):
+                    while (msg := links[i].try_recv()) is not None:
+                        if (msg.get("kind") == "result"
+                                and msg.get("t") == t):
+                            st = rec.stats[i]
+                            st.reported = time.perf_counter()
+                            tel = msg.get("telemetry", {})
+                            st.recv = tel.get("recv")
+                            st.compute_s = tel.get("compute_s")
+                            st.delay_s = tel.get("delay_s")
+                            round_values[i] = msg["values"]
+                now = time.perf_counter()
+                for i in pending:
+                    if i in round_values:
+                        continue
+                    if not links[i].alive():
+                        dead[i] = True
+                        rec.deaths.append(i)
+                    elif now - last_send[i] > timeout:
+                        st = rec.stats[i]
+                        if st.attempts <= cfg.max_retries:
+                            links[i].send({
+                                "kind": "round", "t": t,
+                                "attempt": st.attempts,
+                                "items": by_worker[i],
+                                "delay_s": float(times[i])
+                                * cfg.time_scale,
+                            })
+                            st.attempts += 1
+                            last_send[i] = now
+                            rec.retries += 1
+                        else:
+                            dead[i] = True
+                            rec.deaths.append(i)
+
+            # mu-rule floor: with candidates present the master cannot
+            # know the stragglers before the deadline elapses
+            if cand.any():
+                remaining = cutoff * cfg.time_scale - (
+                    time.perf_counter() - t0
+                )
+                if remaining > 0:
+                    time.sleep(remaining)
+            duration = time.perf_counter() - t0
+
+            # commit the settled decision on the real gate
+            if not cand.any():
+                gate.force(cand)
+            else:
+                eff, waited = gate.admit_partial(
+                    cand.copy(), np.where(dead, np.inf, times)
+                )
+            rec.effective_row = eff.copy()
+            rec.waited = list(waited)
+            rec.duration_s = duration
+            rec.analytic_s = _analytic_duration(
+                times, cutoff, tmax, cand, eff, waited
+            ) * cfg.time_scale
+            measured[t - 1] = duration
+            analytic[t - 1] = rec.analytic_s
+
+            for i, values in round_values.items():
+                if not eff[i]:          # stragglers' results discarded
+                    for key, vec in values:
+                        results[key] = vec
+            sch.observe(t, eff)
+            for jd in sch.collect(t):
+                g = decode_from_results(sch, jd, results)
+                if truth is not None:
+                    err = float(np.max(np.abs(g - truth.full_grad(jd.job))))
+                    decode_max_err = max(decode_max_err, err)
+                    if err > cfg.decode_atol:
+                        raise HarnessError(
+                            f"job {jd.job}: decode error {err:.2e} "
+                            f"exceeds atol {cfg.decode_atol:.1e}"
+                        )
+                decoded_jobs[jd.job] = jd.round_done
+                job_done_time[jd.job] = float(measured[:t].sum())
+    except HarnessError as exc:
+        aborted, abort_reason = True, str(exc)
+    finally:
+        stop_workers(links)
+
+    if not aborted:
+        missing = [j for j in range(1, J + 1) if j not in decoded_jobs]
+        if missing:
+            aborted = True
+            abort_reason = f"jobs never decoded: {missing[:5]}"
+
+    return HarnessResult(
+        scheme=sch.name,
+        n=n,
+        J=J,
+        time_scale=cfg.time_scale,
+        measured_makespan=float(measured.sum()),
+        analytic_makespan=float(analytic.sum()),
+        round_times=measured,
+        analytic_round_times=analytic,
+        ledger=ledger,
+        trace_model=ledger.to_trace_model(seed=cfg.seed),
+        decoded_jobs=decoded_jobs,
+        job_done_time=job_done_time,
+        decode_max_err=decode_max_err,
+        deaths=sorted(set(np.flatnonzero(dead).tolist())),
+        retries=ledger.total_retries(),
+        waitouts=ledger.waitouts(),
+        aborted=aborted,
+        abort_reason=abort_reason,
+    )

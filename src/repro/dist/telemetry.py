@@ -1,0 +1,140 @@
+"""Observability for the distributed harness: per-worker per-round
+timestamps assembled into a runtime ledger and a replayable
+``TraceModel`` recording.
+
+Every round the master logs, per worker: when work was sent, when the
+worker received it, how long real compute took, how much delay was
+enacted, and when the result arrived back — all on the shared
+``perf_counter`` clock (one machine, one monotonic base).  The ledger
+aggregates these into
+
+* ``effective_pattern()`` — the gate-admitted straggler rows, which by
+  construction replay bit-identically through ``simulate_fast`` on the
+  enacted delay profile;
+* ``measured_times()`` — measured round-trip seconds per (round,
+  worker), NaN where no result ever arrived (dead / discarded);
+* ``to_trace_model()`` — a ``TraceModel`` recording (pattern +
+  measured timings) ready for ``TraceModel.to_json`` and the
+  ``recorded-harness`` scenario in ``trace_library``.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+
+@dataclass
+class WorkerRoundStat:
+    """One worker's life cycle inside one round (master clock unless
+    noted; ``None`` where the event never happened)."""
+
+    sent: float | None = None           # master: work dispatched
+    reported: float | None = None       # master: result arrived
+    recv: float | None = None           # worker: work received
+    compute_s: float | None = None      # worker: real chunk-grad time
+    delay_s: float | None = None        # worker: enacted injected delay
+    attempts: int = 0
+
+
+@dataclass
+class RoundRecord:
+    t: int
+    start: float                        # master clock at round start
+    duration_s: float = 0.0             # measured wall-clock duration
+    analytic_s: float = 0.0             # planned-model duration (scaled)
+    planned_row: np.ndarray | None = None    # mu-rule candidates (plan)
+    effective_row: np.ndarray | None = None  # gate-admitted stragglers
+    waited: list[int] = field(default_factory=list)
+    deaths: list[int] = field(default_factory=list)
+    retries: int = 0
+    stats: list[WorkerRoundStat] = field(default_factory=list)
+
+
+@dataclass
+class RunLedger:
+    """Telemetry for one harness run."""
+
+    n: int
+    time_scale: float
+    records: list[RoundRecord] = field(default_factory=list)
+
+    def new_round(self, t: int, start: float) -> RoundRecord:
+        rec = RoundRecord(
+            t=t, start=start,
+            stats=[WorkerRoundStat() for _ in range(self.n)],
+        )
+        self.records.append(rec)
+        return rec
+
+    # -- aggregates ------------------------------------------------------
+    @property
+    def rounds(self) -> int:
+        return len(self.records)
+
+    def effective_pattern(self) -> np.ndarray:
+        rows = [r.effective_row for r in self.records
+                if r.effective_row is not None]
+        if not rows:
+            return np.zeros((0, self.n), dtype=bool)
+        return np.stack(rows)
+
+    def measured_times(self) -> np.ndarray:
+        """(rounds, n) measured send->report seconds; NaN when absent."""
+        out = np.full((self.rounds, self.n), np.nan)
+        for k, rec in enumerate(self.records):
+            for i, st in enumerate(rec.stats):
+                if st.sent is not None and st.reported is not None:
+                    out[k, i] = st.reported - st.sent
+        return out
+
+    def measured_makespan(self) -> float:
+        return float(sum(r.duration_s for r in self.records))
+
+    def analytic_makespan(self) -> float:
+        return float(sum(r.analytic_s for r in self.records))
+
+    def total_retries(self) -> int:
+        return int(sum(r.retries for r in self.records))
+
+    def waitouts(self) -> int:
+        return int(sum(bool(r.waited) for r in self.records))
+
+    def overhead_s(self) -> float:
+        """Mean per-round overhead: measured minus analytic duration."""
+        if not self.records:
+            return 0.0
+        return float(np.mean(
+            [r.duration_s - r.analytic_s for r in self.records]
+        ))
+
+    def to_trace_model(self, *, base_time: float = 1.0,
+                       slow_factor: float = 4.0, jitter: float = 0.05,
+                       compute_scale: float = 8.0, seed: int = 0):
+        """The run as a replayable recording: the gate-admitted pattern
+        plus the measured per-(round, worker) wall-clock timings."""
+        from repro.core.straggler import TraceModel
+
+        return TraceModel(
+            pattern=self.effective_pattern(),
+            base_time=base_time,
+            slow_factor=slow_factor,
+            jitter=jitter,
+            compute_scale=compute_scale,
+            seed=seed,
+            timings=self.measured_times(),
+        )
+
+    def summary(self) -> dict:
+        meas, ana = self.measured_makespan(), self.analytic_makespan()
+        return {
+            "rounds": self.rounds,
+            "measured_makespan_s": meas,
+            "analytic_makespan_s": ana,
+            "agreement": meas / ana if ana > 0 else float("nan"),
+            "waitouts": self.waitouts(),
+            "retries": self.total_retries(),
+            "deaths": sorted({w for r in self.records for w in r.deaths}),
+            "mean_round_overhead_s": self.overhead_s(),
+        }

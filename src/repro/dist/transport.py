@@ -1,0 +1,124 @@
+"""Process/pipe transport for the master-worker harness.
+
+One duplex :func:`multiprocessing.Pipe` per worker, one spawned process
+per worker (``spawn`` keeps children free of inherited jax/XLA state),
+and a thin :class:`WorkerLink` the master drives non-blockingly — the
+``Isend``/``Irecv`` request-array idiom of the MPI coded-computation
+harnesses, restated on ``multiprocessing.connection``.
+
+Messages are plain dicts with a ``"kind"`` key:
+
+* master -> worker: ``{"kind": "round", "t", "attempt", "items",
+  "delay_s"}`` (work for one round; ``items`` are executor-style
+  mini-task dicts) and ``{"kind": "stop"}``.
+* worker -> master: ``{"kind": "result", "t", "attempt", "worker",
+  "values": [(key, vec), ...], "telemetry": {...}}``.
+
+Every send/recv is guarded: a broken pipe marks the link dead instead
+of raising, so the master's timeout/retry layer owns all failure
+policy.
+"""
+
+from __future__ import annotations
+
+import multiprocessing as mp
+import time
+from typing import Any, Callable
+
+
+class WorkerLink:
+    """Master-side handle on one worker process."""
+
+    def __init__(self, worker_id: int, process, conn):
+        self.worker_id = worker_id
+        self.process = process
+        self.conn = conn
+        self.broken = False
+
+    def alive(self) -> bool:
+        return not self.broken and self.process.is_alive()
+
+    def send(self, msg: dict) -> bool:
+        """Best-effort send; returns False (and marks the link broken)
+        when the peer is gone."""
+        if self.broken:
+            return False
+        try:
+            self.conn.send(msg)
+            return True
+        except (BrokenPipeError, OSError, ValueError):
+            self.broken = True
+            return False
+
+    def try_recv(self) -> dict | None:
+        """Non-blocking receive: one message if ready, else None."""
+        if self.broken:
+            return None
+        try:
+            if self.conn.poll(0):
+                return self.conn.recv()
+        except (EOFError, BrokenPipeError, OSError):
+            self.broken = True
+        return None
+
+    def drain(self) -> list[dict]:
+        """Pop every queued message (stale results from prior rounds)."""
+        out = []
+        while True:
+            msg = self.try_recv()
+            if msg is None:
+                return out
+            out.append(msg)
+
+    def stop(self, join_timeout: float = 2.0) -> None:
+        self.send({"kind": "stop"})
+        self.process.join(join_timeout)
+        if self.process.is_alive():
+            self.process.terminate()
+            self.process.join(join_timeout)
+        try:
+            self.conn.close()
+        except OSError:
+            pass
+
+
+def start_workers(
+    num_workers: int,
+    target: Callable,
+    setup_for: Callable[[int], Any],
+    *,
+    start_method: str = "spawn",
+) -> list[WorkerLink]:
+    """Spawn ``num_workers`` processes running ``target(conn, setup)``
+    and return their links.  ``setup_for(worker_id)`` must be picklable
+    (``spawn`` re-imports the target module in a clean interpreter, so
+    children never inherit the master's jax/XLA runtime state)."""
+    ctx = mp.get_context(start_method)
+    links = []
+    for wid in range(num_workers):
+        parent_conn, child_conn = ctx.Pipe(duplex=True)
+        proc = ctx.Process(
+            target=target, args=(child_conn, setup_for(wid)), daemon=True
+        )
+        proc.start()
+        child_conn.close()
+        links.append(WorkerLink(wid, proc, parent_conn))
+    return links
+
+
+def stop_workers(links: list[WorkerLink]) -> None:
+    for link in links:
+        link.stop()
+
+
+def wait_any(links: list[WorkerLink], timeout: float) -> None:
+    """Block until some link has data (or ``timeout`` elapses) without
+    spinning: a poor man's ``MPI.Waitany`` on connection objects."""
+    conns = [lk.conn for lk in links if not lk.broken]
+    if not conns:
+        time.sleep(timeout)
+        return
+    try:
+        mp.connection.wait(conns, timeout)
+    except OSError:
+        time.sleep(min(timeout, 0.005))

@@ -1,0 +1,56 @@
+"""The bench registry stays in sync with the CI workflows: every bench
+name a workflow invokes must resolve in ``BENCHES``, and ``--list``
+must enumerate every registered bench with a description."""
+
+import re
+from pathlib import Path
+
+from benchmarks.run import BENCHES, _bench_description, main
+
+REPO = Path(__file__).resolve().parent.parent
+WORKFLOWS = [REPO / ".github" / "workflows" / "ci.yml",
+             REPO / ".github" / "workflows" / "nightly.yml"]
+
+
+def _workflow_bench_names():
+    """Bench tokens from ``python -m benchmarks.run ...`` run lines
+    (regex on the YAML text — no yaml dependency)."""
+    names = set()
+    for wf in WORKFLOWS:
+        for m in re.finditer(r"python -m benchmarks\.run([^\n]*)",
+                             wf.read_text()):
+            for tok in m.group(1).split():
+                if not tok.startswith("-"):
+                    names.add(tok)
+    return names
+
+
+def test_workflow_files_exist():
+    for wf in WORKFLOWS:
+        assert wf.is_file(), wf
+
+
+def test_every_workflow_bench_resolves():
+    names = _workflow_bench_names()
+    assert names, "no benchmarks.run invocations found in workflows"
+    unknown = sorted(names - set(BENCHES))
+    assert not unknown, f"workflows invoke unregistered benches: {unknown}"
+
+
+def test_tier1_runs_the_dist_exec_smoke():
+    ci = (REPO / ".github" / "workflows" / "ci.yml").read_text()
+    assert "dist-exec-smoke" in ci
+
+
+def test_list_flag_enumerates_all_benches(monkeypatch, capsys):
+    monkeypatch.setattr("sys.argv", ["benchmarks.run", "--list"])
+    main()                              # must not run any bench
+    out = capsys.readouterr().out
+    for name in BENCHES:
+        assert re.search(rf"^{re.escape(name)}\s+\S", out, re.M), name
+
+
+def test_descriptions_are_single_informative_lines():
+    for name, fn in BENCHES.items():
+        desc = _bench_description(name, fn)
+        assert desc and "\n" not in desc and desc != "(no description)", name

@@ -7,7 +7,7 @@
 * scheme — the clustered baselines' coefficient-bearing descriptor
   ``collect`` must report exactly the same ``(job, round_done)`` set
   (and decode weights) as the load-only ``collect_jobs`` fast path and
-  the batched lockstep kernels, across all 5 ``trace_library()``
+  the batched lockstep kernels, across all 6 ``trace_library()``
   scenarios on both backends."""
 
 import jax

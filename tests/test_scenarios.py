@@ -152,7 +152,8 @@ def test_trace_library_shapes_and_determinism():
     lib2 = trace_library(n=n, rounds=rounds, num_traces=num, seed=3)
     names = [sc.name for sc in lib]
     assert names == ["ge-bursty", "ge-heavy", "lambda-cold",
-                     "lambda-hetero", "replayed-waves"]
+                     "lambda-hetero", "replayed-waves",
+                     "recorded-harness"]
     for sc, sc2 in zip(lib, lib2):
         assert sc.delays.shape == (num, rounds, n)
         assert (sc.delays == sc2.delays).all()      # seed-deterministic

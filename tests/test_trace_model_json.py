@@ -1,0 +1,75 @@
+"""TraceModel JSON recording round-trip (stable v1 schema)."""
+
+import json
+
+import numpy as np
+import pytest
+
+from repro.core.straggler import TraceModel, load_recorded_harness
+
+
+def _model(with_timings: bool) -> TraceModel:
+    rng = np.random.default_rng(5)
+    pattern = rng.random((7, 5)) < 0.3
+    timings = None
+    if with_timings:
+        timings = rng.random((7, 5)) * 2.0
+        timings[pattern] = np.nan        # absent results stay NaN
+    return TraceModel(pattern, base_time=1.25, slow_factor=3.5,
+                      jitter=0.07, compute_scale=6.0, seed=11,
+                      timings=timings)
+
+
+@pytest.mark.parametrize("with_timings", [False, True])
+def test_round_trip_exact(with_timings):
+    model = _model(with_timings)
+    back = TraceModel.from_json(model.to_json())
+    assert back.pattern.dtype == np.bool_
+    assert np.array_equal(back.pattern, model.pattern)
+    for f in ("base_time", "slow_factor", "jitter", "compute_scale",
+              "seed"):
+        assert getattr(back, f) == getattr(model, f)
+    if with_timings:
+        assert np.array_equal(back.timings, model.timings,
+                              equal_nan=True)
+    else:
+        assert back.timings is None
+    # the recording must also replay identically as a delay source
+    assert np.array_equal(back.sample_delays(20),
+                          model.sample_delays(20))
+
+
+def test_schema_is_stable_v1():
+    obj = json.loads(_model(True).to_json())
+    assert obj["kind"] == "trace-model"
+    assert obj["version"] == 1
+    assert set(obj) == {
+        "kind", "version", "n", "rounds", "stragglers", "base_time",
+        "slow_factor", "jitter", "compute_scale", "seed", "timings",
+    }
+    assert obj["rounds"] == len(obj["stragglers"])
+    # straggler rows are sorted worker-id lists, timings null-for-NaN
+    for row in obj["stragglers"]:
+        assert row == sorted(row)
+    assert any(v is None for row in obj["timings"] for v in row)
+
+
+def test_rejects_foreign_payloads():
+    with pytest.raises(ValueError):
+        TraceModel.from_json(json.dumps({"kind": "other", "version": 1}))
+    with pytest.raises(ValueError):
+        TraceModel.from_json(json.dumps({"kind": "trace-model",
+                                         "version": 99}))
+
+
+def test_checked_in_harness_recording_loads():
+    model = load_recorded_harness()
+    assert model.pattern.ndim == 2 and model.pattern.shape[1] >= 4
+    assert model.pattern.any()          # a recording with no stragglers
+    assert model.timings is not None    # would gate nothing
+    assert model.timings.shape == model.pattern.shape
+    # tiling to a bigger fleet keeps per-round straggler structure
+    big = load_recorded_harness(n=3 * model.n, rounds=30)
+    assert big.pattern.shape == (30, 3 * model.n)
+    native = model.sample_pattern(30)
+    assert np.array_equal(big.pattern[:, :model.n], native)
