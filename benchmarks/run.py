@@ -866,6 +866,14 @@ def bench_dist_exec(n=8, jobs=16, time_scale=0.02, smoke=False):
     assert len(res.decoded_jobs) == drop_jobs
     print(f"distexec.drop.retries,{res.retries},"
           "resends recovering an injected message drop")
+    # per-worker flakiness counters ride into the JSON artifact
+    wc = res.ledger.worker_counters()
+    print(f"distexec.workers.resends,{sum(wc['resends'])},"
+          f"per-worker {wc['resends']}")
+    print(f"distexec.workers.respawns,{sum(wc['respawns'])},"
+          f"per-worker {wc['respawns']}")
+    print(f"distexec.workers.deaths,{sum(wc['deaths'])},"
+          f"per-worker {wc['deaths']}")
 
     if not smoke:
         # the checked-in recorded-harness scenario replays what a run
@@ -878,6 +886,125 @@ def bench_dist_exec(n=8, jobs=16, time_scale=0.02, smoke=False):
               f"library replay shape {rec[0].delays.shape}")
     else:
         print("distexec.status,1,smoke (4 workers, reduced jobs)")
+
+
+def bench_chaos(n=6, jobs=10, time_scale=0.02, smoke=False):
+    """§Fault tolerance: chaos campaigns + checkpoint/resume gates.
+
+    Two hard gates for the elastic harness (``docs/fault_tolerance.md``):
+
+    1. **Kill-and-respawn wave** — >=2 workers killed at different
+       rounds (1 in the smoke variant) under a bursty design model, so
+       the gate MUST block on each rejoin: the campaign auditor
+       requires zero aborts, every job exact-decoded, full telemetry,
+       and the expected respawn/rejoin transitions in the supervision
+       log.  The full run also audits a correlated regional outage, a
+       flapping worker, and a delayed rejoin.
+    2. **Checkpoint/resume bit-identity** — a fault-free master is
+       killed mid-run (``stop_after_round``) and resumed from its
+       latest ``checkpoint_every``-rounds checkpoint; the resumed
+       recording (restored prefix + freshly measured suffix) must
+       replay BIT-IDENTICALLY through ``simulate_fast`` and decode
+       every job.
+
+    The whole bench runs under a hard ``SIGALRM`` job timeout: a
+    deadlocked campaign fails the gate instead of hanging CI.
+    """
+    import signal
+    import tempfile
+
+    from repro.dist import (
+        HarnessConfig,
+        delayed_rejoin,
+        flapping,
+        kill_wave,
+        regional_outage,
+        run_campaign,
+        run_harness,
+    )
+
+    budget_s = 180 if smoke else 540
+
+    def _alarm(signum, frame):
+        raise TimeoutError(
+            f"chaos bench exceeded its {budget_s}s hard job timeout "
+            "(deadlocked campaign?)"
+        )
+
+    old_handler = signal.signal(signal.SIGALRM, _alarm)
+    signal.alarm(budget_s)
+    try:
+        # -- gate 1: kill-and-respawn wave -------------------------------
+        kills = {1: 2} if smoke else {1: 2, 4: 5}
+        camps = [kill_wave(n, jobs, kills, respawn_backoff_s=0.1)]
+        if not smoke:
+            camps += [
+                regional_outage(n, jobs, [0, 3], at_round=3,
+                                respawn_backoff_s=0.1),
+                flapping(n, jobs, worker=2, first_kill=2, rekill_after=6,
+                         respawn_backoff_s=0.1),
+                delayed_rejoin(n, jobs, worker=1, at_round=3,
+                               ready_delay=0.5, respawn_backoff_s=0.1),
+            ]
+        for camp in camps:
+            report = run_campaign(camp, time_scale=time_scale, seed=SEED)
+            assert report.passed, (camp.name, report.violations)
+            res = report.result
+            tag = camp.name.replace("-", "")
+            print(f"chaos.{tag}.decoded,{len(res.decoded_jobs)},"
+                  f"all {res.J} jobs exact-decoded, zero aborts")
+            print(f"chaos.{tag}.respawns,{res.respawns},"
+                  f"rejoins={res.rejoins} deaths={res.deaths}")
+            print(f"chaos.{tag}.decode_max_err,{res.decode_max_err:.2e},"
+                  "certificate vs full-batch gradient")
+        wave = run_campaign(camps[0], time_scale=time_scale,
+                            seed=SEED + 1).result
+        assert wave.respawns >= len(kills) and wave.rejoins >= len(kills)
+        wc = wave.ledger.worker_counters()
+        print(f"chaos.killwave.worker_respawns,{sum(wc['respawns'])},"
+              f"per-worker {wc['respawns']}")
+
+        # -- gate 2: master killed mid-run, resumed from checkpoint ------
+        name, params = "m-sgc", {"B": 1, "W": 3, "lam": n}
+        src = GilbertElliotSource(n=n, seed=SEED, p_ns=0.09, p_sn=0.5,
+                                  slow_factor=6.0, jitter=0.05)
+        sch = make_scheme(name, n, jobs, **params)
+        delays = src.sample_delays(jobs + sch.T + 2)
+        stop_at = 4 if smoke else 7
+        with tempfile.TemporaryDirectory() as td:
+            ck = f"{td}/master.npz"
+            base = dict(alpha=src.alpha, time_scale=time_scale, seed=SEED,
+                        checkpoint_path=ck, checkpoint_every=3)
+            first = run_harness(name, n, jobs, delays, params=params,
+                                config=HarnessConfig(
+                                    stop_after_round=stop_at, **base))
+            assert first.stopped and not first.aborted, first.abort_reason
+            res = run_harness(name, n, jobs, delays, params=params,
+                              config=HarnessConfig(**base),
+                              resume_from=ck)
+        assert not res.aborted, res.abort_reason
+        assert len(res.decoded_jobs) == jobs
+        sim = simulate_fast(make_scheme(name, n, jobs, **params), delays,
+                            mu=MU, alpha=src.alpha, J=jobs)
+        assert np.array_equal(res.trace_model.pattern,
+                              sim.effective_pattern), (
+            "resumed recording does not replay bit-identically"
+        )
+        assert np.allclose(res.analytic_round_times,
+                           sim.round_times * time_scale)
+        assert res.decoded_jobs == sim.job_done_round
+        ck_round = (stop_at // 3) * 3
+        print(f"chaos.resume.rounds,{res.ledger.rounds},"
+              f"master killed after round {stop_at}, resumed from the "
+              f"round-{ck_round} checkpoint, pattern bit-identical "
+              "through simulate_fast")
+        print(f"chaos.resume.decode_max_err,{res.decode_max_err:.2e},"
+              "post-resume decode certificate")
+        if smoke:
+            print("chaos.status,1,smoke (4 workers, one kill+respawn)")
+    finally:
+        signal.alarm(0)
+        signal.signal(signal.SIGALRM, old_handler)
 
 
 def bench_roofline():
@@ -927,6 +1054,10 @@ BENCHES = {
     ),
     "dist-exec": bench_dist_exec,
     "dist-exec-smoke": lambda: bench_dist_exec(
+        n=4, jobs=6, smoke=True
+    ),
+    "chaos": bench_chaos,
+    "chaos-smoke": lambda: bench_chaos(
         n=4, jobs=6, smoke=True
     ),
     "roofline": bench_roofline,

@@ -10,14 +10,19 @@ replays bit-identically through ``simulate_fast`` — printed as a
 parity check.
 
     PYTHONPATH=src python examples/dist_execution.py [n] [jobs] \
-        [--grad] [--drop W] [--kill W:R] [--record]
+        [--grad] [--drop W] [--kill W:R] [--respawn K] [--record]
 
 ``--grad`` switches workers from the closed-form linear gradients to
 the coded trainer's jax per-slot gradient path (heavier: each child
 compiles its own jit).  ``--drop W`` makes worker W lose its
 first-attempt result every third round (the retry path recovers it);
 ``--kill W:R`` kills worker W after round R (graceful degradation to
-an always-straggler row).  ``--record`` regenerates the checked-in
+an always-straggler row).  ``--respawn K`` gives the supervisor a
+budget of K respawn attempts per worker, so a ``--kill``\\ ed worker
+comes back: a replacement process is spawned after backoff, rejoins
+via the ready handshake, and the open round is replayed to it (the
+printout adds respawn/rejoin counts — see
+``docs/fault_tolerance.md``).  ``--record`` regenerates the checked-in
 ``src/repro/core/recordings/harness-ge-bursty.json`` backing the
 ``recorded-harness`` trace-library scenario.
 """
@@ -35,7 +40,7 @@ RECORDING = (Path(__file__).resolve().parent.parent / "src" / "repro"
 
 
 def parse_args(argv):
-    pos, faults, compute, record = [], {}, "linear", False
+    pos, faults, compute, record, respawn = [], {}, "linear", False, 0
     it = iter(argv)
     for a in it:
         if a == "--grad":
@@ -48,9 +53,11 @@ def parse_args(argv):
         elif a == "--kill":
             w, r = (int(x) for x in next(it, "0:3").split(":"))
             faults[w] = FaultSpec(kill_after=r)
+        elif a == "--respawn":
+            respawn = int(next(it, "2"))
         else:
             pos.append(int(a))
-    return pos, faults, compute, record
+    return pos, faults, compute, record, respawn
 
 
 def model_cfg_for_grad():
@@ -62,13 +69,16 @@ def model_cfg_for_grad():
 
 
 def main(argv):
-    pos, faults, compute, record = parse_args(argv)
+    pos, faults, compute, record, respawn = parse_args(argv)
     n = pos[0] if pos else 8
     jobs = pos[1] if len(pos) > 1 else 12
     src = GilbertElliotSource(n=n, seed=0, p_ns=0.09, p_sn=0.5,
                               slow_factor=6.0, jitter=0.05)
     delays = src.sample_delays(jobs + 8)
     kw = dict(alpha=src.alpha, time_scale=0.02, seed=0, faults=faults)
+    if respawn:
+        kw.update(respawn_max_attempts=respawn, respawn_backoff_s=0.1,
+                  respawn_backoff_max_s=1.0)
     if compute == "grad":
         kw.update(compute="grad", model_cfg=model_cfg_for_grad(),
                   batch_size=32, seq_len=8, decode_atol=1e-3)
@@ -96,7 +106,9 @@ def main(argv):
               f"decode_err {res.decode_max_err:.1e}  "
               f"replay={replay}  "
               f"waitouts={res.waitouts} retries={res.retries} "
-              f"deaths={res.deaths}")
+              f"deaths={res.deaths}"
+              + (f" respawns={res.respawns} rejoins={res.rejoins}"
+                 if respawn else ""))
         if record and name == "gc" and not faults:
             RECORDING.write_text(res.trace_model.to_json(indent=1) + "\n")
             print(f"       recorded -> {RECORDING}")

@@ -4,6 +4,21 @@ Leaves are stored under path-encoded keys; structure (treedef repr +
 per-leaf dtype) rides along so bf16 params restore as bf16.  Multi-host
 note: in a real pod deployment each host saves its addressable shards;
 here (single host / dry-run) the full tree is materialized.
+
+Two surfaces:
+
+* ``save_pytree`` / ``load_pytree`` — shape-checked restore *into* a
+  reference structure (train states, where the caller always has a
+  freshly-initialized ``like`` tree);
+* ``save_blob`` / ``load_blob`` — structure-free round-trip of an
+  arbitrary JSON-able skeleton (dicts with str keys, lists, scalars,
+  None) holding numpy arrays at the leaves.  No reference needed at
+  load time and no pickle involved — the skeleton travels as JSON with
+  ``{"__npz__": key}`` placeholders for the arrays.  This is what the
+  ``repro.dist`` master checkpoints its round-loop state through
+  (admitted-pattern history, in-flight results, ledger, RNG state):
+  the state's shape depends on the run, so a ``like`` tree cannot
+  exist before the load.
 """
 
 from __future__ import annotations
@@ -66,6 +81,64 @@ def load_pytree(path: str, like):
                     f"shape mismatch for {key}: {arr.shape} vs {ref.shape}"
                 )
     return jax.tree.unflatten(treedef, out)
+
+
+_BLOB_TAG = "__npz__"
+
+
+def save_blob(path: str, obj) -> str:
+    """Serialize a nested dict/list/scalar/ndarray structure to one npz
+    file; returns the actual path written (npz extension enforced).
+    Dict keys must be strings; scalar leaves must be JSON-able."""
+    if not path.endswith(".npz"):
+        path += ".npz"
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    arrays: dict[str, np.ndarray] = {}
+
+    def enc(o):
+        if isinstance(o, np.ndarray):
+            key = f"a{len(arrays)}"
+            arrays[key] = o
+            return {_BLOB_TAG: key}
+        if isinstance(o, np.bool_):
+            return bool(o)
+        if isinstance(o, np.integer):
+            return int(o)
+        if isinstance(o, np.floating):
+            return float(o)
+        if isinstance(o, dict):
+            bad = [k for k in o if not isinstance(k, str)]
+            if bad:
+                raise TypeError(f"blob dict keys must be str, got {bad[:3]}")
+            return {k: enc(v) for k, v in o.items()}
+        if isinstance(o, (list, tuple)):
+            return [enc(v) for v in o]
+        if o is None or isinstance(o, (bool, int, float, str)):
+            return o
+        raise TypeError(f"blob cannot serialize {type(o).__name__}")
+
+    skeleton = enc(obj)
+    np.savez(path, __blob__=json.dumps(skeleton), **arrays)
+    return path
+
+
+def load_blob(path: str):
+    """Inverse of :func:`save_blob` (tuples come back as lists)."""
+    if not path.endswith(".npz"):
+        path += ".npz"
+    with np.load(path, allow_pickle=False) as zf:
+        skeleton = json.loads(str(zf["__blob__"]))
+
+        def dec(o):
+            if isinstance(o, dict):
+                if set(o) == {_BLOB_TAG}:
+                    return zf[o[_BLOB_TAG]]
+                return {k: dec(v) for k, v in o.items()}
+            if isinstance(o, list):
+                return [dec(v) for v in o]
+            return o
+
+        return dec(skeleton)
 
 
 def save_train_state(path: str, params, opt_state, *, step: int, extra=None):

@@ -86,30 +86,36 @@ def run_protocol(
 
 
 def decode_from_results(
-    scheme: Scheme, jd: JobDecode, results: dict
+    scheme: Scheme, jd: JobDecode, results: dict, *, job: int | None = None
 ) -> np.ndarray:
     """Reconstruct job ``jd.job``'s full gradient from per-task result
     vectors keyed executor-style (``("ell", job, worker)`` /
     ``("d1", job, chunk)`` / ``("d2", job, m, worker)``).  Shared by the
     in-process protocol check above and the ``repro.dist`` master, which
-    feeds it vectors computed by real worker processes."""
+    feeds it vectors computed by real worker processes.
+
+    ``job`` overrides the job id used in the result keys: the elastic
+    master's degraded epochs run a *fresh* scheme whose local job
+    numbering (1..J') maps onto the original job ids the workers
+    compute and key their results with."""
+    j = jd.job if job is None else job
     if jd.ell_weights:  # GC / SR-SGC / clustered
         return sum(
-            w * results[("ell", jd.job, i)] for i, w in jd.ell_weights.items()
+            w * results[("ell", j, i)] for i, w in jd.ell_weights.items()
         )
     if isinstance(scheme, MSGCScheme):
         total = sum(
-            results[("d1", jd.job, scheme.d1_chunk(i, l))]
+            results[("d1", j, scheme.d1_chunk(i, l))]
             for i in range(scheme.n)
             for l in range(scheme.W - 1)
         )
         for m, weights in jd.group_weights.items():
             total = total + sum(
-                w * results[("d2", jd.job, m, i)] for i, w in weights.items()
+                w * results[("d2", j, m, i)] for i, w in weights.items()
             )
         return total
     # uncoded
-    return sum(results[("d1", jd.job, c)] for c in range(scheme.n))
+    return sum(results[("d1", j, c)] for c in range(scheme.n))
 
 
 def conforming_pattern(

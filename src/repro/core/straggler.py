@@ -1202,6 +1202,12 @@ class TraceModel:
     #: real harness run (NaN where no result arrived); carried for
     #: provenance/validation, never consulted by ``sample_delays``
     timings: np.ndarray | None = None
+    #: optional supervision event log from an ELASTIC harness run —
+    #: ``{"round", "worker", "kind"}`` dicts (kinds: death / respawn /
+    #: rejoin / lost / degrade); presence upgrades the recording to
+    #: schema v2.  Carried for provenance, never consulted by
+    #: ``sample_delays``.
+    events: list | None = None
 
     @property
     def n(self) -> int:
@@ -1227,7 +1233,7 @@ class TraceModel:
         slow = 1.0 + (self.slow_factor - 1.0) * rng.random((rounds, self.n))
         return np.where(pat, base * np.maximum(slow, 1.0), base)
 
-    # -- stable JSON recording schema (version 1) ------------------------
+    # -- stable JSON recording schema (versions 1 and 2) -----------------
     #
     #   {"kind": "trace-model", "version": 1, "n", "rounds",
     #    "stragglers": [[worker ids straggling in round t], ...],
@@ -1235,7 +1241,14 @@ class TraceModel:
     #    "timings": null | [[seconds-or-null per worker], ...]}
     #
     # Straggler rows are id lists (patterns are sparse); timings use
-    # null for NaN (JSON has no NaN).  ``from_json(to_json())`` is exact.
+    # null for NaN (JSON has no NaN).  Version 2 adds one key to v1:
+    # "events" — the elastic harness's supervision log
+    # ([{"round", "worker", "kind"}, ...]); recordings without events
+    # keep serializing as v1 so checked-in v1 files stay byte-stable.
+    # ``from_json(to_json())`` is exact for both versions.
+
+    _REQUIRED_FIELDS = ("n", "rounds", "stragglers", "base_time",
+                        "slow_factor", "jitter", "compute_scale", "seed")
 
     def to_json(self, *, indent: int | None = None) -> str:
         """Serialize the recording (see the schema comment above)."""
@@ -1247,9 +1260,9 @@ class TraceModel:
                 [None if np.isnan(v) else float(v) for v in row]
                 for row in tim
             ]
-        return json.dumps({
+        obj = {
             "kind": "trace-model",
-            "version": 1,
+            "version": 2 if self.events is not None else 1,
             "n": int(pat.shape[1]),
             "rounds": int(pat.shape[0]),
             "stragglers": [np.flatnonzero(row).tolist() for row in pat],
@@ -1259,27 +1272,84 @@ class TraceModel:
             "compute_scale": float(self.compute_scale),
             "seed": int(self.seed),
             "timings": timings,
-        }, indent=indent)
+        }
+        if self.events is not None:
+            obj["events"] = self.events
+        return json.dumps(obj, indent=indent)
 
     @classmethod
     def from_json(cls, text: str) -> "TraceModel":
-        """Inverse of :meth:`to_json` (exact round-trip)."""
+        """Inverse of :meth:`to_json` (exact round-trip).
+
+        Validates the payload up front and raises ``ValueError`` with a
+        descriptive message — not a ``KeyError``/``IndexError`` — on a
+        foreign payload, an unknown schema version, missing fields, or
+        malformed straggler/timing rows."""
         obj = json.loads(text)
-        if obj.get("kind") != "trace-model" or obj.get("version") != 1:
+        if not isinstance(obj, dict) or obj.get("kind") != "trace-model":
             raise ValueError(
-                f"not a v1 trace-model recording: kind={obj.get('kind')!r} "
-                f"version={obj.get('version')!r}"
+                f"not a trace-model recording: kind={obj.get('kind')!r}"
+                if isinstance(obj, dict)
+                else f"not a trace-model recording: {type(obj).__name__}"
+            )
+        version = obj.get("version")
+        if version not in (1, 2):
+            raise ValueError(
+                f"unsupported trace-model schema version {version!r} "
+                "(this reader supports versions 1 and 2)"
+            )
+        missing = [k for k in cls._REQUIRED_FIELDS if k not in obj]
+        if missing:
+            raise ValueError(
+                f"trace-model v{version} recording is missing "
+                f"field(s): {missing}"
             )
         rounds, n = int(obj["rounds"]), int(obj["n"])
+        stragglers = obj["stragglers"]
+        if not isinstance(stragglers, list) or len(stragglers) != rounds:
+            raise ValueError(
+                f"malformed stragglers: expected {rounds} rows, got "
+                f"{len(stragglers) if isinstance(stragglers, list) else type(stragglers).__name__}"
+            )
         pat = np.zeros((rounds, n), dtype=bool)
-        for t, ids in enumerate(obj["stragglers"]):
+        for t, ids in enumerate(stragglers):
+            if not isinstance(ids, list) or not all(
+                isinstance(i, int) and 0 <= i < n for i in ids
+            ):
+                raise ValueError(
+                    f"malformed straggler row {t + 1}: want worker ids in "
+                    f"[0, {n}), got {ids!r}"
+                )
             pat[t, ids] = True
         timings = obj.get("timings")
         if timings is not None:
+            if not isinstance(timings, list) or len(timings) != rounds:
+                raise ValueError(
+                    f"malformed timings: expected {rounds} rows, got "
+                    f"{len(timings) if isinstance(timings, list) else type(timings).__name__}"
+                )
+            for t, row in enumerate(timings):
+                if (not isinstance(row, list) or len(row) != n
+                        or not all(v is None
+                                   or isinstance(v, (int, float))
+                                   for v in row)):
+                    raise ValueError(
+                        f"malformed timing row {t + 1}: want {n} "
+                        f"seconds-or-null entries, got {row!r}"
+                    )
             timings = np.asarray([
                 [np.nan if v is None else float(v) for v in row]
                 for row in timings
             ], dtype=np.float64)
+        events = obj.get("events") if version >= 2 else None
+        if events is not None:
+            if not isinstance(events, list) or not all(
+                isinstance(ev, dict) and "kind" in ev for ev in events
+            ):
+                raise ValueError(
+                    "malformed events: want a list of dicts with a "
+                    "'kind' key"
+                )
         return cls(
             pattern=pat,
             base_time=float(obj["base_time"]),
@@ -1288,6 +1358,7 @@ class TraceModel:
             compute_scale=float(obj["compute_scale"]),
             seed=int(obj["seed"]),
             timings=timings,
+            events=events,
         )
 
 

@@ -1,20 +1,39 @@
 """Real distributed execution harness: master/worker coded rounds with
-fault injection and measured telemetry.
+fault injection, elastic supervision, and measured telemetry.
 
 See ``docs/scheme_kernels.md`` ("Real execution harness") for the
 transport contract, timeout/retry semantics, injection knobs, and the
-telemetry -> ``TraceModel`` recording schema.
+telemetry -> ``TraceModel`` recording schema, and
+``docs/fault_tolerance.md`` for the supervision state machine,
+checkpoint/resume format, degradation policy, and chaos campaigns.
 """
 
+from .chaos import (
+    CampaignReport,
+    ChaosCampaign,
+    delayed_rejoin,
+    flapping,
+    kill_wave,
+    regional_outage,
+    run_campaign,
+)
 from .injection import FaultSpec, enact_delay
 from .master import (
     HarnessConfig,
     HarnessError,
     HarnessResult,
+    degrade_params,
     run_harness,
 )
+from .supervisor import RespawnPolicy, Supervisor
 from .telemetry import RoundRecord, RunLedger, WorkerRoundStat
-from .transport import WorkerLink, start_workers, stop_workers, wait_any
+from .transport import (
+    WorkerLink,
+    start_worker,
+    start_workers,
+    stop_workers,
+    wait_any,
+)
 from .worker import TaskComputer, WorkerSetup, linear_job_data, worker_main
 
 __all__ = [
@@ -23,11 +42,22 @@ __all__ = [
     "HarnessConfig",
     "HarnessError",
     "HarnessResult",
+    "degrade_params",
     "run_harness",
+    "RespawnPolicy",
+    "Supervisor",
+    "ChaosCampaign",
+    "CampaignReport",
+    "run_campaign",
+    "kill_wave",
+    "flapping",
+    "regional_outage",
+    "delayed_rejoin",
     "RoundRecord",
     "RunLedger",
     "WorkerRoundStat",
     "WorkerLink",
+    "start_worker",
     "start_workers",
     "stop_workers",
     "wait_any",

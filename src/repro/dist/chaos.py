@@ -1,0 +1,264 @@
+"""Chaos-campaign driver: composed fault scenarios with end-to-end
+invariant checks.
+
+A :class:`ChaosCampaign` composes per-worker :class:`FaultSpec`\\ s into
+a timed scenario over the elastic harness — kill waves, correlated
+regional outages, flapping workers, delayed rejoins — and
+:func:`run_campaign` executes it and *audits* the result instead of
+just returning it:
+
+* every one of the J jobs decoded exactly (certificate vs the
+  full-batch gradient);
+* the run terminated without deadlock or un-budgeted abort;
+* the telemetry stream is complete — one ledger record per attempted
+  round, measured round times aligned, every committed round carrying
+  its gate-admitted row, timestamps ordered;
+* the supervision log shows the transitions the scenario was built to
+  provoke (minimum respawn / rejoin / degrade counts).
+
+Violations come back as human-readable strings on the
+:class:`CampaignReport` rather than raising, so a campaign sweep can
+report every broken invariant at once (the ``chaos`` bench and
+``tests/test_dist_elastic.py`` assert ``report.passed``).
+
+Builders (``kill_wave``, ``regional_outage``, ``flapping``,
+``delayed_rejoin``) cover the canonical scenarios; campaigns are plain
+dataclasses, so bespoke ones are one literal away.  See
+``docs/fault_tolerance.md`` for how each scenario exercises the
+supervision state machine.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from .injection import FaultSpec
+from .master import HarnessConfig, HarnessResult, run_harness
+
+
+@dataclass
+class ChaosCampaign:
+    """One composed fault scenario plus the invariants it must provoke."""
+
+    name: str
+    n: int
+    jobs: int
+    scheme: str = "gc"
+    params: dict = field(default_factory=lambda: {"s": 1})
+    faults: dict = field(default_factory=dict)          # wid -> FaultSpec
+    respawn_faults: dict = field(default_factory=dict)  # respawned incarnation
+    respawn_max_attempts: int = 3
+    respawn_backoff_s: float = 0.2
+    respawn_backoff_max_s: float = 1.0
+    degrade: str = "off"
+    expect_abort: bool = False
+    min_respawns: int = 0
+    min_rejoins: int = 0
+    min_degrades: int = 0
+    note: str = ""
+    config_kw: dict = field(default_factory=dict)       # extra HarnessConfig
+
+
+@dataclass
+class CampaignReport:
+    campaign: str
+    result: HarnessResult
+    violations: list = field(default_factory=list)
+
+    @property
+    def passed(self) -> bool:
+        return not self.violations
+
+    def summary(self) -> dict:
+        res = self.result
+        return {
+            "campaign": self.campaign,
+            "passed": self.passed,
+            "violations": list(self.violations),
+            "rounds": res.ledger.rounds,
+            "decoded": len(res.decoded_jobs),
+            "jobs": res.J,
+            "decode_max_err": res.decode_max_err,
+            "deaths": res.deaths,
+            "respawns": res.respawns,
+            "rejoins": res.rejoins,
+            "degraded": res.degraded,
+            "aborted": res.aborted,
+        }
+
+
+# ---------------------------------------------------------------------------
+# canonical scenario builders
+# ---------------------------------------------------------------------------
+
+
+def _bursty_defaults(n: int, kw: dict) -> dict:
+    """Builders default to M-SGC's bursty design model (B=1): it admits
+    a dead worker's row for exactly one round before the gate must wait
+    it out, so the master deterministically BLOCKS on the rejoin — the
+    supervision path these scenarios exist to provoke.  (Under GC-Rep
+    a dead lane can stay admissible forever and a fast run may finish
+    before any replacement reports ready.)"""
+    kw.setdefault("scheme", "m-sgc")
+    kw.setdefault("params", {"B": 1, "W": 3, "lam": n})
+    return kw
+
+
+def kill_wave(n: int, jobs: int, kills: dict, **kw) -> ChaosCampaign:
+    """Workers die at different rounds (``kills``: wid -> round) and the
+    respawn budget brings each one back clean."""
+    kw = _bursty_defaults(n, kw)
+    kw.setdefault("min_respawns", len(kills))
+    kw.setdefault("min_rejoins", len(kills))
+    return ChaosCampaign(
+        name=kw.pop("name", "kill-wave"),
+        n=n, jobs=jobs,
+        faults={w: FaultSpec(kill_after=r) for w, r in kills.items()},
+        note=f"kill {sorted(kills)} at rounds "
+             f"{[kills[w] for w in sorted(kills)]}, respawn clean",
+        **kw,
+    )
+
+
+def regional_outage(n: int, jobs: int, region, at_round: int,
+                    **kw) -> ChaosCampaign:
+    """A correlated outage: every worker in ``region`` dies in the same
+    round (one failure domain), all respawn."""
+    region = sorted(region)
+    kw = _bursty_defaults(n, kw)
+    kw.setdefault("min_respawns", len(region))
+    kw.setdefault("min_rejoins", len(region))
+    return ChaosCampaign(
+        name=kw.pop("name", "regional-outage"),
+        n=n, jobs=jobs,
+        faults={w: FaultSpec(kill_after=at_round) for w in region},
+        note=f"region {region} out at round {at_round}",
+        **kw,
+    )
+
+
+def flapping(n: int, jobs: int, worker: int, first_kill: int,
+             rekill_after: int, **kw) -> ChaosCampaign:
+    """One worker dies, rejoins, and dies again — and again: EVERY
+    respawned incarnation carries the same ``kill_after``, so from
+    ``rekill_after`` on the worker serves exactly one round per respawn.
+    The default budget is sized so the run can flap its way to the end
+    (one attempt per remaining round) rather than exhausting mid-run."""
+    kw = _bursty_defaults(n, kw)
+    kw.setdefault("respawn_max_attempts", jobs + 8)
+    kw.setdefault("min_respawns", 2)
+    kw.setdefault("min_rejoins", 1)
+    return ChaosCampaign(
+        name=kw.pop("name", "flapping"),
+        n=n, jobs=jobs,
+        faults={worker: FaultSpec(kill_after=first_kill)},
+        respawn_faults={worker: FaultSpec(kill_after=rekill_after)},
+        note=f"worker {worker} flaps: dies at {first_kill}, "
+             f"again at {rekill_after}",
+        **kw,
+    )
+
+
+def delayed_rejoin(n: int, jobs: int, worker: int, at_round: int,
+                   ready_delay: float, **kw) -> ChaosCampaign:
+    """The replacement process is slow to report ready
+    (``FaultSpec.ready_delay``), so the fleet runs short-handed for a
+    while before the rejoin replay catches the worker up."""
+    kw = _bursty_defaults(n, kw)
+    kw.setdefault("min_respawns", 1)
+    kw.setdefault("min_rejoins", 1)
+    return ChaosCampaign(
+        name=kw.pop("name", "delayed-rejoin"),
+        n=n, jobs=jobs,
+        faults={worker: FaultSpec(kill_after=at_round)},
+        respawn_faults={worker: FaultSpec(ready_delay=ready_delay)},
+        note=f"worker {worker} dies at {at_round}, "
+             f"rejoin delayed {ready_delay}s",
+        **kw,
+    )
+
+
+# ---------------------------------------------------------------------------
+# execution + audit
+# ---------------------------------------------------------------------------
+
+
+def _delays_for(camp: ChaosCampaign, rounds: int,
+                seed: int) -> np.ndarray:
+    """Mild i.i.d. planned delays: enough texture that the mu-rule and
+    gate stay exercised, small enough that the chaos (not the trace)
+    dominates the run."""
+    rng = np.random.default_rng([seed, camp.n, camp.jobs])
+    delays = rng.uniform(0.0, 0.4, size=(rounds, camp.n))
+    # an occasional genuine straggler spike
+    spikes = rng.random((rounds, camp.n)) < 0.08
+    delays[spikes] += rng.uniform(4.0, 8.0, size=int(spikes.sum()))
+    return delays
+
+
+def run_campaign(camp: ChaosCampaign, *, time_scale: float = 0.02,
+                 seed: int = 1) -> CampaignReport:
+    """Execute ``camp`` on the real harness and audit the invariants."""
+    rounds = camp.jobs + 8
+    delays = _delays_for(camp, rounds, seed)
+    cfg = HarnessConfig(
+        alpha=8.0,
+        time_scale=time_scale,
+        seed=seed,
+        round_timeout=0.25,
+        faults=dict(camp.faults),
+        respawn_faults=dict(camp.respawn_faults),
+        respawn_max_attempts=camp.respawn_max_attempts,
+        respawn_backoff_s=camp.respawn_backoff_s,
+        respawn_backoff_max_s=camp.respawn_backoff_max_s,
+        degrade=camp.degrade,
+        **camp.config_kw,
+    )
+    res = run_harness(camp.scheme, camp.n, camp.jobs, delays,
+                      params=dict(camp.params), config=cfg)
+    return CampaignReport(campaign=camp.name, result=res,
+                          violations=_audit(camp, res))
+
+
+def _audit(camp: ChaosCampaign, res: HarnessResult) -> list:
+    v: list[str] = []
+    if camp.expect_abort:
+        if not res.aborted:
+            v.append("expected the run to abort, but it completed")
+        return v
+    if res.aborted:
+        v.append(f"aborted: {res.abort_reason}")
+    want = set(range(1, camp.jobs + 1))
+    missing = sorted(want - set(res.decoded_jobs))
+    if missing:
+        v.append(f"jobs never decoded: {missing}")
+    if res.decode_max_err > 1e-6:
+        v.append(f"decode error {res.decode_max_err:.2e} > 1e-6")
+    led = res.ledger
+    if led.rounds != len(res.round_times):
+        v.append(
+            f"telemetry gap: {led.rounds} ledger rounds vs "
+            f"{len(res.round_times)} measured round times"
+        )
+    degrade_rounds = {ev.get("round") for ev in res.events
+                      if ev.get("kind") == "degrade"}
+    for rec in led.records:
+        if rec.effective_row is None and rec.t not in degrade_rounds:
+            v.append(f"round {rec.t}: no committed straggler row")
+        for i, st in enumerate(rec.stats):
+            if (st.reported is not None and st.sent is not None
+                    and st.reported < st.sent):
+                v.append(
+                    f"round {rec.t} worker {i}: reported before sent"
+                )
+    if res.respawns < camp.min_respawns:
+        v.append(f"respawns {res.respawns} < expected "
+                 f">={camp.min_respawns}")
+    if res.rejoins < camp.min_rejoins:
+        v.append(f"rejoins {res.rejoins} < expected >={camp.min_rejoins}")
+    if res.degraded < camp.min_degrades:
+        v.append(f"degrades {res.degraded} < expected "
+                 f">={camp.min_degrades}")
+    return v

@@ -12,7 +12,11 @@ that is genuinely busy).  Static knobs live in :class:`FaultSpec`:
   resend path recovers them on the retry attempt.
 * ``kill_after`` — the worker process exits cleanly right after
   reporting this round, modelling a permanently lost worker; the master
-  degrades it to an always-straggler row.
+  degrades it to an always-straggler row — or, with a respawn budget
+  (``repro.dist.supervisor``), brings a replacement back up.
+* ``ready_delay`` — seconds slept before the readiness handshake,
+  modelling a slow (re)join: the supervisor keeps the worker in the
+  ``respawning`` state until the delayed ``ready`` lands.
 """
 
 from __future__ import annotations
@@ -29,6 +33,7 @@ class FaultSpec:
     delay_mode: str = "sleep"            # "sleep" | "spin"
     drop_rounds: frozenset = field(default_factory=frozenset)
     kill_after: int | None = None        # exit after reporting round k
+    ready_delay: float = 0.0             # sleep before the ready handshake
 
     def drops(self, t: int, attempt: int) -> bool:
         return attempt == 0 and t in self.drop_rounds

@@ -54,11 +54,19 @@ class RoundRecord:
 
 @dataclass
 class RunLedger:
-    """Telemetry for one harness run."""
+    """Telemetry for one harness run.
+
+    ``events`` is the supervision log — ``{"round", "worker", "kind"}``
+    dicts with kinds ``death`` / ``respawn`` / ``rejoin`` / ``lost`` /
+    ``degrade`` — shared by reference with the :class:`Supervisor` so
+    every fleet transition lands here and rides into the ``TraceModel``
+    v2 recording.
+    """
 
     n: int
     time_scale: float
     records: list[RoundRecord] = field(default_factory=list)
+    events: list = field(default_factory=list)
 
     def new_round(self, t: int, start: float) -> RoundRecord:
         rec = RoundRecord(
@@ -109,11 +117,34 @@ class RunLedger:
             [r.duration_s - r.analytic_s for r in self.records]
         ))
 
+    def worker_counters(self) -> dict:
+        """Per-worker flakiness counters for the bench JSON artifacts:
+        resends (retry attempts beyond the first send), deaths,
+        respawns, and rejoins, each a length-``n`` list."""
+        resends = [0] * self.n
+        for rec in self.records:
+            for i, st in enumerate(rec.stats):
+                resends[i] += max(0, st.attempts - 1)
+        by_kind = {"death": [0] * self.n, "respawn": [0] * self.n,
+                   "rejoin": [0] * self.n}
+        for ev in self.events:
+            k, w = ev.get("kind"), ev.get("worker")
+            if k in by_kind and w is not None and 0 <= w < self.n:
+                by_kind[k][w] += 1
+        return {
+            "resends": resends,
+            "deaths": by_kind["death"],
+            "respawns": by_kind["respawn"],
+            "rejoins": by_kind["rejoin"],
+        }
+
     def to_trace_model(self, *, base_time: float = 1.0,
                        slow_factor: float = 4.0, jitter: float = 0.05,
                        compute_scale: float = 8.0, seed: int = 0):
         """The run as a replayable recording: the gate-admitted pattern
-        plus the measured per-(round, worker) wall-clock timings."""
+        plus the measured per-(round, worker) wall-clock timings; an
+        elastic run (any supervision events) additionally carries the
+        event log and serializes as schema v2."""
         from repro.core.straggler import TraceModel
 
         return TraceModel(
@@ -124,10 +155,12 @@ class RunLedger:
             compute_scale=compute_scale,
             seed=seed,
             timings=self.measured_times(),
+            events=[dict(ev) for ev in self.events] or None,
         )
 
     def summary(self) -> dict:
         meas, ana = self.measured_makespan(), self.analytic_makespan()
+        wc = self.worker_counters()
         return {
             "rounds": self.rounds,
             "measured_makespan_s": meas,
@@ -136,5 +169,91 @@ class RunLedger:
             "waitouts": self.waitouts(),
             "retries": self.total_retries(),
             "deaths": sorted({w for r in self.records for w in r.deaths}),
+            "respawns": int(sum(wc["respawns"])),
+            "rejoins": int(sum(wc["rejoins"])),
             "mean_round_overhead_s": self.overhead_s(),
         }
+
+    # -- checkpoint round-trip (repro.checkpoint.io blob leaves) ---------
+    def to_state(self) -> dict:
+        """The ledger as a ``save_blob``-able structure (arrays +
+        JSON-able skeleton), exact enough that a resumed master keeps
+        appending to the same telemetry stream."""
+        R, n = self.rounds, self.n
+
+        def stamp(get):
+            out = np.full((R, n), np.nan)
+            for k, rec in enumerate(self.records):
+                for i, st in enumerate(rec.stats):
+                    v = get(st)
+                    if v is not None:
+                        out[k, i] = v
+            return out
+
+        def rowstack(get):
+            has = np.array([get(r) is not None for r in self.records])
+            rows = np.zeros((R, n), dtype=bool)
+            for k, rec in enumerate(self.records):
+                if has[k]:
+                    rows[k] = get(rec)
+            return has, rows
+
+        has_p, planned = rowstack(lambda r: r.planned_row)
+        has_e, effective = rowstack(lambda r: r.effective_row)
+        return {
+            "n": n,
+            "time_scale": float(self.time_scale),
+            "t": np.array([r.t for r in self.records], dtype=np.int64),
+            "start": np.array([r.start for r in self.records]),
+            "duration_s": np.array([r.duration_s for r in self.records]),
+            "analytic_s": np.array([r.analytic_s for r in self.records]),
+            "has_planned": has_p, "planned": planned,
+            "has_effective": has_e, "effective": effective,
+            "waited": [list(map(int, r.waited)) for r in self.records],
+            "deaths": [list(map(int, r.deaths)) for r in self.records],
+            "round_retries": np.array([r.retries for r in self.records],
+                                      dtype=np.int64),
+            "sent": stamp(lambda s: s.sent),
+            "reported": stamp(lambda s: s.reported),
+            "recv": stamp(lambda s: s.recv),
+            "compute_s": stamp(lambda s: s.compute_s),
+            "delay_s": stamp(lambda s: s.delay_s),
+            "attempts": np.array(
+                [[st.attempts for st in r.stats] for r in self.records],
+                dtype=np.int64,
+            ).reshape(R, n),
+            "events": [dict(ev) for ev in self.events],
+        }
+
+    @classmethod
+    def from_state(cls, state: dict) -> "RunLedger":
+        n = int(state["n"])
+        led = cls(n=n, time_scale=float(state["time_scale"]),
+                  events=[dict(ev) for ev in state["events"]])
+        R = len(state["t"])
+
+        def opt(a):
+            return None if np.isnan(a) else float(a)
+
+        for k in range(R):
+            rec = led.new_round(int(state["t"][k]),
+                                float(state["start"][k]))
+            rec.duration_s = float(state["duration_s"][k])
+            rec.analytic_s = float(state["analytic_s"][k])
+            if state["has_planned"][k]:
+                rec.planned_row = np.asarray(state["planned"][k],
+                                             dtype=bool)
+            if state["has_effective"][k]:
+                rec.effective_row = np.asarray(state["effective"][k],
+                                               dtype=bool)
+            rec.waited = list(map(int, state["waited"][k]))
+            rec.deaths = list(map(int, state["deaths"][k]))
+            rec.retries = int(state["round_retries"][k])
+            for i, st in enumerate(rec.stats):
+                st.sent = opt(state["sent"][k][i])
+                st.reported = opt(state["reported"][k][i])
+                st.recv = opt(state["recv"][k][i])
+                st.compute_s = opt(state["compute_s"][k][i])
+                st.delay_s = opt(state["delay_s"][k][i])
+                st.attempts = int(state["attempts"][k][i])
+        return led

@@ -46,7 +46,7 @@ class WorkerLink:
         try:
             self.conn.send(msg)
             return True
-        except (BrokenPipeError, OSError, ValueError):
+        except (BrokenPipeError, EOFError, OSError, ValueError):
             self.broken = True
             return False
 
@@ -71,15 +71,55 @@ class WorkerLink:
             out.append(msg)
 
     def stop(self, join_timeout: float = 2.0) -> None:
-        self.send({"kind": "stop"})
-        self.process.join(join_timeout)
-        if self.process.is_alive():
-            self.process.terminate()
-            self.process.join(join_timeout)
+        """Graceful shutdown that NEVER raises out of master cleanup: a
+        child that died mid-send leaves the pipe in an EOF/broken state,
+        and every step here tolerates that race."""
         try:
-            self.conn.close()
-        except OSError:
+            self.send({"kind": "stop"})
+            self.process.join(join_timeout)
+            if self.process.is_alive():
+                self.process.terminate()
+                self.process.join(join_timeout)
+        except (EOFError, BrokenPipeError, OSError, ValueError):
             pass
+        finally:
+            try:
+                self.conn.close()
+            except (EOFError, BrokenPipeError, OSError):
+                pass
+
+    def kill(self) -> None:
+        """Immediate teardown (no stop message): used by the supervisor
+        when retiring a wedged or superseded worker process."""
+        self.broken = True
+        try:
+            if self.process.is_alive():
+                self.process.terminate()
+                self.process.join(1.0)
+        except (OSError, ValueError):
+            pass
+        finally:
+            try:
+                self.conn.close()
+            except (EOFError, BrokenPipeError, OSError):
+                pass
+
+
+def start_worker(
+    worker_id: int,
+    target: Callable,
+    setup: Any,
+    *,
+    start_method: str = "spawn",
+) -> WorkerLink:
+    """Spawn ONE worker process running ``target(conn, setup)`` — the
+    primitive both the initial fleet and supervisor respawns use."""
+    ctx = mp.get_context(start_method)
+    parent_conn, child_conn = ctx.Pipe(duplex=True)
+    proc = ctx.Process(target=target, args=(child_conn, setup), daemon=True)
+    proc.start()
+    child_conn.close()
+    return WorkerLink(worker_id, proc, parent_conn)
 
 
 def start_workers(
@@ -93,17 +133,10 @@ def start_workers(
     and return their links.  ``setup_for(worker_id)`` must be picklable
     (``spawn`` re-imports the target module in a clean interpreter, so
     children never inherit the master's jax/XLA runtime state)."""
-    ctx = mp.get_context(start_method)
-    links = []
-    for wid in range(num_workers):
-        parent_conn, child_conn = ctx.Pipe(duplex=True)
-        proc = ctx.Process(
-            target=target, args=(child_conn, setup_for(wid)), daemon=True
-        )
-        proc.start()
-        child_conn.close()
-        links.append(WorkerLink(wid, proc, parent_conn))
-    return links
+    return [
+        start_worker(wid, target, setup_for(wid), start_method=start_method)
+        for wid in range(num_workers)
+    ]
 
 
 def stop_workers(links: list[WorkerLink]) -> None:

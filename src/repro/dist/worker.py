@@ -112,6 +112,12 @@ class TaskComputer:
         return self._jobs[job]
 
     # -- shared surface --------------------------------------------------
+    def set_bounds(self, bounds) -> None:
+        """Adopt a new chunk partition (master ``reconfig`` after the
+        fleet shrank): per-job data is partition-independent, so only
+        the slice table changes."""
+        self.bounds = [tuple(b) for b in bounds]
+
     def chunk_grad(self, job: int, chunk: int) -> np.ndarray:
         lo, hi = self.bounds[chunk]
         if self.compute == "linear":
@@ -179,13 +185,27 @@ class WorkerSetup:
         )
 
 
-def _enact_cancellable(conn, t: int, seconds: float, mode: str):
+def _pong(conn, worker_id: int, msg: dict) -> bool:
+    """Answer a liveness ping (piggybacked on the round protocol);
+    returns False when the pipe is gone."""
+    try:
+        conn.send({"kind": "pong", "worker": worker_id,
+                   "seq": msg.get("seq")})
+        return True
+    except (BrokenPipeError, EOFError, OSError):
+        return False
+
+
+def _enact_cancellable(conn, worker_id: int, t: int, seconds: float,
+                       mode: str):
     """Burn the injected delay, but abandon it if the master has moved
     on to a later round — the protocol's task cancellation: a straggler
     whose result was not admitted stops wasting time on it.  Returns the
     interrupting message (later round / stop) or ``None`` when the full
     delay elapsed.  Same-round resends arriving mid-delay are absorbed
-    (the single reply after the delay answers them)."""
+    (the single reply after the delay answers them), and liveness pings
+    are answered inline so a slow worker is never mistaken for a dead
+    one."""
     deadline = time.perf_counter() + seconds
     while True:
         remaining = deadline - time.perf_counter()
@@ -195,6 +215,10 @@ def _enact_cancellable(conn, t: int, seconds: float, mode: str):
         try:
             if conn.poll(0):
                 nxt = conn.recv()
+                if nxt.get("kind") == "ping":
+                    if not _pong(conn, worker_id, nxt):
+                        return {"kind": "stop"}
+                    continue
                 if nxt.get("kind") == "round" and int(nxt["t"]) <= t:
                     continue
                 return nxt
@@ -207,6 +231,8 @@ def worker_main(conn, setup: WorkerSetup) -> None:
     fault = setup.fault
     computer = setup.computer()
     computer.warmup()
+    if fault.ready_delay > 0:
+        time.sleep(fault.ready_delay)   # slow (re)join
     # readiness handshake: the master must not start round timeouts
     # while children are still paying interpreter/import/compile
     # start-up cost
@@ -227,6 +253,17 @@ def worker_main(conn, setup: WorkerSetup) -> None:
         kind = msg.get("kind")
         if kind == "stop":
             return
+        if kind == "ping":
+            if not _pong(conn, setup.worker_id, msg):
+                return
+            continue
+        if kind == "reconfig":
+            # the fleet shrank: adopt the survivors' chunk partition and
+            # forget results keyed on the old one
+            computer.set_bounds(msg["bounds"])
+            computer.warmup()
+            cache.clear()
+            continue
         if kind != "round":
             continue
         t, attempt = int(msg["t"]), int(msg["attempt"])
@@ -242,7 +279,7 @@ def worker_main(conn, setup: WorkerSetup) -> None:
             compute_s = time.perf_counter() - t0
             delay_s = float(msg["delay_s"])
             pending = _enact_cancellable(
-                conn, t, delay_s, fault.delay_mode
+                conn, setup.worker_id, t, delay_s, fault.delay_mode
             )
             if pending is not None:
                 if pending.get("kind") == "stop":

@@ -1,0 +1,301 @@
+"""Elastic fault tolerance of the real execution harness: worker
+respawn/rejoin, adaptive degradation onto survivors, master
+checkpoint/resume, and the chaos-campaign auditor.
+
+The acceptance pins mirror ``docs/fault_tolerance.md``:
+
+* a killed worker respawns within its budget, rejoins via the
+  assignment-ledger replay, and every job still decodes exactly;
+* when deaths exhaust the budget and the gate would have to wait a
+  lost worker out, ``degrade="shrink"`` re-solves the scheme on the
+  survivors and finishes the remaining jobs (``degrade="off"`` aborts,
+  the PR-7 contract);
+* a master killed mid-run (``stop_after_round``) resumes from its
+  latest checkpoint and the full recorded pattern + analytic clocks
+  still replay BIT-IDENTICALLY through ``simulate_fast`` — gate and
+  scheme state are pure functions of the committed history, so the
+  replay-based reconstruction is exact;
+* chaos campaigns (kill waves, flapping, regional outages, delayed
+  rejoins) complete with zero invariant violations.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import GilbertElliotSource, make_scheme, simulate_fast
+from repro.checkpoint.io import load_blob, save_blob
+from repro.dist import (
+    FaultSpec,
+    HarnessConfig,
+    degrade_params,
+    kill_wave,
+    run_campaign,
+    run_harness,
+)
+
+N = 4
+SCALE = 0.01
+GE = dict(p_ns=0.15, p_sn=0.5, slow_factor=5.0, jitter=0.05)
+
+
+def _delays(rounds, seed=7, n=N):
+    return GilbertElliotSource(n=n, seed=seed, **GE).sample_delays(rounds)
+
+
+def _cfg(**kw):
+    base = dict(alpha=8.0, time_scale=SCALE, seed=1, round_timeout=0.25)
+    base.update(kw)
+    return HarnessConfig(**base)
+
+
+# ---------------------------------------------------------------------------
+# respawn / rejoin
+# ---------------------------------------------------------------------------
+
+
+def test_killed_worker_respawns_and_rejoins():
+    # M-SGC's bursty design model (B=1) admits the dead worker's row
+    # for exactly one round, after which the gate MUST wait it out —
+    # forcing the master onto the block-for-rejoin path, so the test
+    # exercises respawn + ledger replay deterministically rather than
+    # racing the run's end
+    J, w, r_die = 6, 3, 2
+    delays = _delays(J + 6, seed=5)
+    cfg = _cfg(
+        faults={w: FaultSpec(kill_after=r_die)},
+        respawn_max_attempts=2,
+        respawn_backoff_s=0.05,
+        respawn_jitter=0.0,
+    )
+    res = run_harness("m-sgc", N, J, delays,
+                      params={"B": 1, "W": 3, "lam": N}, config=cfg)
+    assert not res.aborted, res.abort_reason
+    assert sorted(res.decoded_jobs) == list(range(1, J + 1))
+    assert res.decode_max_err < 1e-8
+    assert res.deaths == [w]
+    assert res.respawns >= 1 and res.rejoins >= 1
+    # the supervision log tells the story in order for that worker
+    kinds = [ev["kind"] for ev in res.events if ev.get("worker") == w]
+    assert kinds.index("death") < kinds.index("respawn") \
+        < kinds.index("rejoin")
+    # once rejoined, the worker serves rounds again: its row cannot be
+    # an always-straggler suffix
+    pat = res.trace_model.pattern
+    assert not pat[r_die:, w].all()
+    # an elastic run records as schema v2 and round-trips with events
+    assert res.trace_model.events is not None
+    back = type(res.trace_model).from_json(res.trace_model.to_json())
+    assert back.events == res.trace_model.events
+    assert np.array_equal(back.pattern, pat)
+
+
+def test_per_worker_counters_track_the_fleet():
+    J, w = 5, 2
+    delays = _delays(J + 5, seed=9)
+    cfg = _cfg(
+        faults={w: FaultSpec(kill_after=2)},
+        respawn_max_attempts=2,
+        respawn_backoff_s=0.05,
+    )
+    res = run_harness("m-sgc", N, J, delays,
+                      params={"B": 1, "W": 3, "lam": N}, config=cfg)
+    assert not res.aborted, res.abort_reason
+    wc = res.ledger.worker_counters()
+    assert wc["deaths"][w] >= 1
+    assert wc["respawns"][w] >= 1
+    assert wc["rejoins"][w] >= 1
+    for i in range(N):
+        if i != w:
+            assert wc["deaths"][i] == 0
+
+
+# ---------------------------------------------------------------------------
+# adaptive degradation
+# ---------------------------------------------------------------------------
+
+
+def test_degrade_shrink_finishes_where_off_aborts():
+    # two permanent deaths under cyclic-MDS gc s=1 (strict per-round
+    # model; GC-Rep's coverage model would admit both): the gate can
+    # admit one always-straggler row but never two at once, so the run
+    # MUST either re-select the scheme on the survivors or abort
+    J = 6
+    params = {"s": 1, "prefer_rep": False}
+    delays = _delays(J + 6, seed=3)
+    faults = {1: FaultSpec(kill_after=2), 3: FaultSpec(kill_after=3)}
+
+    off = run_harness("gc", N, J, delays, params=params,
+                      config=_cfg(faults=dict(faults), degrade="off"))
+    assert off.aborted
+    assert "dead worker" in off.abort_reason
+
+    res = run_harness("gc", N, J, delays, params=params,
+                      config=_cfg(faults=dict(faults), degrade="shrink"))
+    assert not res.aborted, res.abort_reason
+    assert res.degraded >= 1
+    assert sorted(res.decoded_jobs) == list(range(1, J + 1))
+    assert res.decode_max_err < 1e-8      # certificate vs full gradient
+    assert set(res.deaths) == {1, 3}
+    notes = [ev for ev in res.events if ev["kind"] == "degrade"]
+    assert notes and "jobs re-run" in notes[0]["note"]
+
+
+def test_degrade_params_shrinks_within_family():
+    assert degrade_params("gc", {"s": 3}, 3) == ("gc", {"s": 2})
+    assert degrade_params("m-sgc", {"B": 1, "W": 3, "lam": 8}, 5) \
+        == ("m-sgc", {"B": 1, "W": 3, "lam": 5})
+    # clustered layout that no longer divides the fleet falls back to gc
+    assert degrade_params("dc-gc", {"C": 4, "s": 1}, 6) == ("gc", {"s": 1})
+    name, p = degrade_params("dc-gc", {"C": 4, "s": 1}, 8)
+    assert name == "dc-gc" and p["C"] == 4
+    with pytest.raises(Exception):
+        degrade_params("gc", {"s": 1}, 1)
+
+
+# ---------------------------------------------------------------------------
+# checkpoint / resume
+# ---------------------------------------------------------------------------
+
+
+def test_blob_round_trip(tmp_path):
+    obj = {
+        "version": 1,
+        "arrays": [np.arange(6).reshape(2, 3), np.zeros(0)],
+        "nested": {"flag": True, "none": None, "name": "run",
+                   "mask": np.array([True, False])},
+        "scalars": [1, 2.5, np.float64(3.5), np.int64(7), np.bool_(True)],
+    }
+    path = save_blob(str(tmp_path / "state"), obj)
+    assert path.endswith(".npz")
+    back = load_blob(path)
+    assert back["version"] == 1
+    assert np.array_equal(back["arrays"][0], obj["arrays"][0])
+    assert back["arrays"][1].shape == (0,)
+    assert back["nested"]["flag"] is True
+    assert back["nested"]["none"] is None
+    assert np.array_equal(back["nested"]["mask"], [True, False])
+    assert back["scalars"] == [1, 2.5, 3.5, 7, True]
+    with pytest.raises(TypeError):
+        save_blob(str(tmp_path / "bad"), {1: "non-str key"})
+    with pytest.raises(TypeError):
+        save_blob(str(tmp_path / "bad"), {"f": lambda: None})
+
+
+@pytest.mark.parametrize("name,params", [
+    ("gc", {"s": 1}),
+    # W=3 memory: decode needs d1 parts from rounds BEFORE the
+    # checkpoint, exercising the in-flight results serialization
+    ("m-sgc", {"B": 1, "W": 3, "lam": N}),
+])
+def test_master_resumes_bit_identically(tmp_path, name, params):
+    J, stop_at = 5, 3
+    delays = _delays(J + 4, seed=11)
+    ck = str(tmp_path / "master.npz")
+
+    first = run_harness(name, N, J, delays, params=params,
+                        config=_cfg(checkpoint_path=ck, checkpoint_every=1,
+                                    stop_after_round=stop_at))
+    assert first.stopped and not first.aborted
+    assert first.checkpoint_path == ck
+    assert first.ledger.rounds == stop_at
+
+    res = run_harness(name, N, J, delays, params=params,
+                      config=_cfg(checkpoint_path=ck, checkpoint_every=1),
+                      resume_from=ck)
+    assert not res.aborted, res.abort_reason
+    assert not res.stopped
+    assert sorted(res.decoded_jobs) == list(range(1, J + 1))
+    assert res.decode_max_err < 1e-8
+
+    # the resumed recording — prefix restored from the checkpoint,
+    # suffix freshly measured — replays bit-identically end to end
+    sim = simulate_fast(make_scheme(name, N, J, **params), delays,
+                        mu=1.0, alpha=8.0, J=J)
+    assert np.array_equal(res.trace_model.pattern, sim.effective_pattern)
+    assert np.allclose(res.analytic_round_times, sim.round_times * SCALE)
+    assert res.decoded_jobs == sim.job_done_round
+    assert res.ledger.rounds == J + make_scheme(name, N, J, **params).T
+
+
+def test_resume_rejects_mismatched_checkpoint(tmp_path):
+    J = 4
+    delays = _delays(J + 3, seed=2)
+    ck = str(tmp_path / "ck.npz")
+    first = run_harness("gc", N, J, delays, params={"s": 1},
+                        config=_cfg(checkpoint_path=ck, checkpoint_every=1,
+                                    stop_after_round=2))
+    assert first.stopped
+    # a mismatched checkpoint is a configuration error, surfaced before
+    # any worker is spawned
+    from repro.dist import HarnessError
+    with pytest.raises(HarnessError, match="does not match"):
+        run_harness("uncoded", N, J, delays,
+                    config=_cfg(), resume_from=ck)
+
+
+# ---------------------------------------------------------------------------
+# fault-spec coverage: spin delays, chaos campaigns
+# ---------------------------------------------------------------------------
+
+
+def test_spin_delay_mode_end_to_end():
+    J = 3
+    delays = _delays(J + 2, seed=13)
+    res = run_harness("gc", N, J, delays, params={"s": 1},
+                      config=_cfg(delay_mode="spin"))
+    assert not res.aborted, res.abort_reason
+    assert sorted(res.decoded_jobs) == list(range(1, J + 1))
+    # spin delays burn CPU but must still be enacted and telemetered
+    assert all(st.delay_s >= 0 for rec in res.ledger.records
+               for st in rec.stats if st.delay_s is not None)
+
+
+def test_chaos_kill_wave_campaign_passes():
+    camp = kill_wave(4, 6, {1: 2, 2: 4},
+                     respawn_backoff_s=0.05)
+    report = run_campaign(camp, time_scale=SCALE)
+    assert report.passed, report.violations
+    res = report.result
+    assert res.respawns >= 2 and res.rejoins >= 2
+    assert sorted(res.decoded_jobs) == list(range(1, 7))
+
+
+def test_chaos_audit_catches_missing_expectations():
+    # a fault-free run cannot satisfy a min_respawns expectation: the
+    # auditor must say so instead of passing vacuously
+    camp = kill_wave(4, 4, {})
+    camp.min_respawns = 1
+    report = run_campaign(camp, time_scale=SCALE)
+    assert not report.passed
+    assert any("respawns" in v for v in report.violations)
+    summ = report.summary()
+    assert summ["passed"] is False and summ["decoded"] == 4
+
+
+# ---------------------------------------------------------------------------
+# grad-mode workers: resend cache + kill under the real gradient path
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow  # each child compiles its own tiny-transformer jit
+def test_grad_mode_resend_cache_and_kill():
+    from repro.configs.qwen2_0_5b import SMOKE
+
+    cfg_model = SMOKE.replace(num_layers=1, d_model=32, num_heads=2,
+                              num_kv_heads=1, head_dim=16, d_ff=64,
+                              vocab_size=64)
+    n, J = 3, 3
+    delays = _delays(J + 2, seed=4, n=n)
+    cfg = _cfg(
+        compute="grad", model_cfg=cfg_model, batch_size=12, seq_len=8,
+        round_timeout=1.0, decode_atol=1e-3,
+        faults={0: FaultSpec(drop_rounds=frozenset({1})),
+                2: FaultSpec(kill_after=2)},
+        respawn_max_attempts=1, respawn_backoff_s=0.05,
+    )
+    res = run_harness("gc", n, J, delays, params={"s": 1}, config=cfg)
+    assert not res.aborted, res.abort_reason
+    assert sorted(res.decoded_jobs) == list(range(1, J + 1))
+    # the dropped first attempt recovered from the worker result cache
+    assert res.retries >= 1
+    assert 2 in res.deaths

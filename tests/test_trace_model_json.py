@@ -1,4 +1,7 @@
-"""TraceModel JSON recording round-trip (stable v1 schema)."""
+"""TraceModel JSON recording round-trip (stable v1 schema; v2 adds the
+elastic harness's supervision-event log) and schema validation: unknown
+versions and malformed payloads must fail with descriptive
+``ValueError``\\ s, never a bare ``KeyError``."""
 
 import json
 
@@ -60,6 +63,85 @@ def test_rejects_foreign_payloads():
     with pytest.raises(ValueError):
         TraceModel.from_json(json.dumps({"kind": "trace-model",
                                          "version": 99}))
+
+
+def _valid_obj():
+    return json.loads(_model(True).to_json())
+
+
+def test_unknown_version_error_is_descriptive():
+    obj = _valid_obj()
+    obj["version"] = 3
+    with pytest.raises(ValueError, match=r"unsupported.*version 3.*"
+                                         r"supports versions 1 and 2"):
+        TraceModel.from_json(json.dumps(obj))
+    obj["version"] = "one"
+    with pytest.raises(ValueError, match="unsupported"):
+        TraceModel.from_json(json.dumps(obj))
+
+
+def test_non_dict_and_missing_fields_are_descriptive():
+    with pytest.raises(ValueError, match="not a trace-model"):
+        TraceModel.from_json(json.dumps([1, 2, 3]))
+    obj = _valid_obj()
+    del obj["stragglers"]
+    del obj["base_time"]
+    with pytest.raises(ValueError) as exc:
+        TraceModel.from_json(json.dumps(obj))
+    # every missing field is named, not just the first KeyError hit
+    assert "stragglers" in str(exc.value)
+    assert "base_time" in str(exc.value)
+
+
+def test_malformed_straggler_rows_are_descriptive():
+    obj = _valid_obj()
+    obj["stragglers"][2] = [0, 99]      # worker id out of range
+    with pytest.raises(ValueError, match=r"straggler row 3.*worker ids"):
+        TraceModel.from_json(json.dumps(obj))
+    obj = _valid_obj()
+    obj["stragglers"] = obj["stragglers"][:-1]   # row count mismatch
+    with pytest.raises(ValueError, match="straggler"):
+        TraceModel.from_json(json.dumps(obj))
+
+
+def test_malformed_timing_rows_are_descriptive():
+    obj = _valid_obj()
+    obj["timings"][1] = obj["timings"][1][:-1]   # short row
+    with pytest.raises(ValueError, match=r"timing row 2"):
+        TraceModel.from_json(json.dumps(obj))
+    obj = _valid_obj()
+    obj["timings"][0][0] = "fast"                # non-numeric entry
+    with pytest.raises(ValueError, match=r"timing row 1.*seconds-or-null"):
+        TraceModel.from_json(json.dumps(obj))
+    obj = _valid_obj()
+    obj["timings"] = obj["timings"][:-1]         # row count mismatch
+    with pytest.raises(ValueError, match="timing"):
+        TraceModel.from_json(json.dumps(obj))
+
+
+def test_v2_events_round_trip_and_v1_stays_v1():
+    model = _model(True)
+    assert json.loads(model.to_json())["version"] == 1   # no events
+    events = [{"round": 3, "worker": 2, "kind": "death",
+               "note": "process died"},
+              {"round": 4, "worker": 2, "kind": "respawn"},
+              {"round": 5, "worker": 2, "kind": "rejoin"}]
+    v2 = TraceModel(model.pattern, base_time=model.base_time,
+                    slow_factor=model.slow_factor, jitter=model.jitter,
+                    compute_scale=model.compute_scale, seed=model.seed,
+                    timings=model.timings, events=events)
+    obj = json.loads(v2.to_json())
+    assert obj["version"] == 2 and obj["events"] == events
+    back = TraceModel.from_json(v2.to_json())
+    assert back.events == events
+    assert np.array_equal(back.pattern, v2.pattern)
+    # malformed events are rejected, not silently carried
+    obj["events"] = [{"round": 1}]               # no "kind"
+    with pytest.raises(ValueError, match="event"):
+        TraceModel.from_json(json.dumps(obj))
+    obj["events"] = "death"
+    with pytest.raises(ValueError, match="event"):
+        TraceModel.from_json(json.dumps(obj))
 
 
 def test_checked_in_harness_recording_loads():

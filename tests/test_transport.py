@@ -1,0 +1,74 @@
+"""Transport-layer hardening: pipe teardown races must never raise.
+
+A worker process can die at any instant — including between a
+``poll()`` returning True and the ``recv()``, or mid-``send`` — so
+every :class:`WorkerLink` surface is exercised here against a child
+that is already dead, killed mid-conversation, or holding a closed
+pipe.  ``drain`` / ``stop`` / ``send`` / ``try_recv`` must degrade to
+no-ops (``send`` returning False), never propagate ``EOFError`` /
+``BrokenPipeError`` / ``OSError``.
+"""
+
+import time
+
+from repro.dist.transport import start_worker, start_workers, stop_workers
+
+
+def _echo_worker(conn, setup):
+    while True:
+        try:
+            msg = conn.recv()
+        except (EOFError, OSError):
+            return
+        if msg.get("kind") == "stop":
+            return
+        conn.send({"kind": "result", "echo": msg})
+
+
+def test_drain_and_stop_on_prekilled_child_never_raise():
+    lk = start_worker(0, _echo_worker, {"worker_id": 0})
+    assert lk.send({"kind": "round", "t": 1})
+    lk.process.kill()
+    lk.process.join(5.0)
+    assert not lk.process.is_alive()
+    # every surface is now a race loser; none may raise
+    for _ in range(3):
+        lk.drain()
+        lk.try_recv()
+    assert lk.send({"kind": "round", "t": 2}) is False
+    assert lk.broken
+    lk.stop()
+    lk.stop()               # idempotent
+    assert not lk.alive()
+
+
+def test_stop_after_conn_close_is_silent():
+    lk = start_worker(1, _echo_worker, {"worker_id": 1})
+    lk.conn.close()
+    lk.drain()              # poll on a closed handle
+    assert lk.send({"kind": "round", "t": 1}) is False
+    lk.stop()
+    lk.process.join(5.0)
+    assert not lk.process.is_alive()
+
+
+def test_kill_tears_down_without_handshake():
+    lk = start_worker(2, _echo_worker, {"worker_id": 2})
+    lk.kill()
+    assert lk.broken
+    assert not lk.alive()
+    lk.kill()               # idempotent
+    lk.stop()
+
+
+def test_stop_workers_with_mixed_dead_fleet():
+    links = start_workers(3, _echo_worker, lambda i: {"worker_id": i})
+    links[1].process.kill()
+    links[1].process.join(5.0)
+    links[2].conn.close()
+    stop_workers(links)     # must not raise on any of the three
+    deadline = time.perf_counter() + 5.0
+    for lk in links:
+        while lk.process.is_alive() and time.perf_counter() < deadline:
+            time.sleep(0.01)
+        assert not lk.process.is_alive()
