@@ -785,7 +785,8 @@ def bench_coded_train(n: int = 8, models: int = 4, jobs: int = 24,
         print("codedtrain.status,1,smoke (reduced jobs/models)")
 
 
-def bench_dist_exec(n=8, jobs=16, time_scale=0.02, smoke=False):
+def bench_dist_exec(n=8, jobs=16, time_scale=0.02, smoke=False,
+                    transport="pipe"):
     """§Harness: REAL master/worker rounds vs the analytic clock.
 
     Spawns ``n`` real worker processes (``repro.dist``), runs GC and
@@ -803,7 +804,12 @@ def bench_dist_exec(n=8, jobs=16, time_scale=0.02, smoke=False):
        on real processes, not just in simulation;
     5. an injected message drop is recovered by the retry path.
 
-    The ``dist-exec-smoke`` tier-1 variant shrinks to 4 workers.
+    ``transport`` selects the wire (``"pipe"`` or ``"tcp"``): the
+    ``dist-exec-tcp`` variant runs the identical gates over real
+    sockets with length-prefixed CRC framing, plus the compute-vs-
+    communication split from the wire timestamps.  The
+    ``dist-exec-smoke`` / ``dist-exec-tcp-smoke`` tier-1 variants
+    shrink to 4 workers.
     """
     from repro.core.straggler import trace_library
     from repro.dist import FaultSpec, HarnessConfig, run_harness
@@ -818,7 +824,8 @@ def bench_dist_exec(n=8, jobs=16, time_scale=0.02, smoke=False):
 
     measured = {}
     for name, params in schemes:
-        cfg = HarnessConfig(alpha=alpha, time_scale=time_scale, seed=SEED)
+        cfg = HarnessConfig(alpha=alpha, time_scale=time_scale, seed=SEED,
+                            transport=transport)
         res = run_harness(name, n, jobs, delays, params=params, config=cfg)
         assert not res.aborted, (name, res.abort_reason)
         sim = simulate_fast(make_scheme(name, n, jobs, **params), delays,
@@ -846,6 +853,15 @@ def bench_dist_exec(n=8, jobs=16, time_scale=0.02, smoke=False):
               "max |decoded - full-batch gradient|")
         print(f"distexec.{name}.waitouts,{res.waitouts},"
               f"retries={res.retries} deaths={len(res.deaths)}")
+        # compute-vs-communication split from the wire timestamps
+        wcn = res.ledger.worker_counters()
+        wire = sum(wcn["wire_send_s"]) + sum(wcn["wire_recv_s"])
+        print(f"distexec.{name}.wire_send_s,{sum(wcn['wire_send_s']):.4f},"
+              f"master->worker wire seconds ({transport})")
+        print(f"distexec.{name}.wire_recv_s,{sum(wcn['wire_recv_s']):.4f},"
+              f"worker->master wire seconds ({transport})")
+        print(f"distexec.{name}.wire_frac,{wire / (n * res.measured_makespan):.4f},"
+              "per-worker comms share of the measured makespan")
     assert measured["m-sgc"] <= measured["gc"], (
         "M-SGC measured makespan must not exceed GC's: "
         f"{measured['m-sgc']:.3f} vs {measured['gc']:.3f}"
@@ -1007,6 +1023,79 @@ def bench_chaos(n=6, jobs=10, time_scale=0.02, smoke=False):
         signal.signal(signal.SIGALRM, old_handler)
 
 
+def bench_dist_exec_tcp():
+    """§Harness over TCP: the identical dist-exec gates on real sockets
+    (CRC framing, id-deduped delivery) plus the wire-time split."""
+    bench_dist_exec(transport="tcp")
+
+
+def bench_chaos_net(n=6, jobs=10, time_scale=0.02, smoke=False):
+    """§Network faults: partition-vs-death and lossy-wire gates (TCP).
+
+    Two hard gates for the transport tier (``repro.dist.net``,
+    ``docs/fault_tolerance.md`` §Network transport & partitions):
+
+    1. **Partition heal** — one worker's TCP link goes dark mid-run
+       (both directions; the full bench also audits the one-way
+       variant) and heals within the round hard-deadline.  The
+       supervisor must classify it PARTITIONED (process alive), block
+       the bursty gate on the heal, and take the worker back via the
+       open-round replay with ZERO respawns burned — partition-vs-death
+       discrimination, audited by the campaign.
+    2. **Lossy network** — every link carries added latency + jitter
+       plus probabilistic drop / duplicate / reorder.  The timeout /
+       resend tier plus message-id dedup must still decode every job
+       exactly with no corrupted gradient.
+
+    Runs under a hard ``SIGALRM`` job timeout like ``bench_chaos``.
+    """
+    import signal
+
+    from repro.dist import lossy_network, partition_heal, run_campaign
+
+    budget_s = 180 if smoke else 480
+
+    def _alarm(signum, frame):
+        raise TimeoutError(
+            f"chaos-net bench exceeded its {budget_s}s hard job timeout "
+            "(wedged partition?)"
+        )
+
+    old_handler = signal.signal(signal.SIGALRM, _alarm)
+    signal.alarm(budget_s)
+    try:
+        camps = [partition_heal(n, jobs, worker=1, at_round=3, heal_s=0.8,
+                                respawn_backoff_s=0.1)]
+        if not smoke:
+            camps += [
+                partition_heal(n, jobs, worker=2, at_round=2, heal_s=0.6,
+                               mode="oneway", respawn_backoff_s=0.1,
+                               name="partition-heal-oneway"),
+            ]
+        camps += [lossy_network(n, jobs)]
+        for camp in camps:
+            report = run_campaign(camp, time_scale=time_scale, seed=SEED)
+            assert report.passed, (camp.name, report.violations)
+            res = report.result
+            tag = camp.name.replace("-", "")
+            print(f"chaosnet.{tag}.decoded,{len(res.decoded_jobs)},"
+                  f"all {res.J} jobs exact-decoded, zero aborts")
+            print(f"chaosnet.{tag}.partitions,{res.partitions},"
+                  f"heals={res.heals} respawns={res.respawns}")
+            print(f"chaosnet.{tag}.decode_max_err,{res.decode_max_err:.2e},"
+                  "certificate vs full-batch gradient")
+            if camp.name.startswith("partition-heal"):
+                assert res.respawns == 0, (
+                    f"{camp.name}: partition burned {res.respawns} "
+                    "respawn(s) — must heal instead"
+                )
+        if smoke:
+            print("chaosnet.status,1,smoke (twoway partition + lossy wire)")
+    finally:
+        signal.alarm(0)
+        signal.signal(signal.SIGALRM, old_handler)
+
+
 def bench_roofline():
     """§Roofline: three terms per (arch, shape, mesh) from the dry-run."""
     from . import roofline
@@ -1056,8 +1145,16 @@ BENCHES = {
     "dist-exec-smoke": lambda: bench_dist_exec(
         n=4, jobs=6, smoke=True
     ),
+    "dist-exec-tcp": bench_dist_exec_tcp,
+    "dist-exec-tcp-smoke": lambda: bench_dist_exec(
+        n=4, jobs=6, smoke=True, transport="tcp"
+    ),
     "chaos": bench_chaos,
     "chaos-smoke": lambda: bench_chaos(
+        n=4, jobs=6, smoke=True
+    ),
+    "chaos-net": bench_chaos_net,
+    "chaos-net-smoke": lambda: bench_chaos_net(
         n=4, jobs=6, smoke=True
     ),
     "roofline": bench_roofline,

@@ -13,7 +13,13 @@ state machine each scenario exercises).
         [--scenario NAME] [--degrade]
 
 ``--scenario`` picks one of ``kill-wave``, ``regional-outage``,
-``flapping``, ``delayed-rejoin`` (default: run all four).
+``flapping``, ``delayed-rejoin``, ``partition-heal``,
+``lossy-network`` (default: run all four process-fault scenarios plus
+``partition-heal``).  The network scenarios run on the TCP transport
+(``repro.dist.net``): ``partition-heal`` cuts one worker off the wire
+and audits that the supervisor heals it with ZERO respawns burned;
+``lossy-network`` adds latency/drop/duplicate/reorder to every link
+and audits exact decodes through the resend + dedup tier.
 ``--degrade`` additionally runs a kill wave with a zero respawn budget
 and ``degrade="shrink"``: instead of aborting, the master re-solves
 the code on the survivors and re-runs the undecoded jobs.
@@ -22,7 +28,8 @@ the code on the survivors and re-runs the undecoded jobs.
 import sys
 
 from repro.dist import (delayed_rejoin, flapping, kill_wave,
-                        regional_outage, run_campaign)
+                        lossy_network, partition_heal, regional_outage,
+                        run_campaign)
 
 
 def build(name, n, jobs):
@@ -38,6 +45,11 @@ def build(name, n, jobs):
     if name == "delayed-rejoin":
         return delayed_rejoin(n, jobs, worker=1, at_round=3,
                               ready_delay=0.5, respawn_backoff_s=0.1)
+    if name == "partition-heal":
+        return partition_heal(n, jobs, worker=1, at_round=3, heal_s=0.8,
+                              respawn_backoff_s=0.1)
+    if name == "lossy-network":
+        return lossy_network(n, jobs)
     raise SystemExit(f"unknown scenario {name!r}")
 
 
@@ -58,7 +70,8 @@ def show(report):
           f"decoded={s['decoded']}/{s['jobs']}  "
           f"err={s['decode_max_err']:.1e}  deaths={s['deaths']}  "
           f"respawns={s['respawns']} rejoins={s['rejoins']} "
-          f"degrades={s['degraded']}")
+          f"degrades={s['degraded']} partitions={s['partitions']} "
+          f"heals={s['heals']}")
     for violation in s["violations"]:
         print(f"    !! {violation}")
 
@@ -78,7 +91,7 @@ def main(argv):
 
     names = ([scenario] if scenario else
              ["kill-wave", "regional-outage", "flapping",
-              "delayed-rejoin"])
+              "delayed-rejoin", "partition-heal"])
     print(f"# chaos campaigns: {n} workers, {jobs} jobs")
     reports = [run_campaign(build(name, n, jobs)) for name in names]
     if degrade:

@@ -10,7 +10,8 @@ replays bit-identically through ``simulate_fast`` — printed as a
 parity check.
 
     PYTHONPATH=src python examples/dist_execution.py [n] [jobs] \
-        [--grad] [--drop W] [--kill W:R] [--respawn K] [--record]
+        [--grad] [--drop W] [--kill W:R] [--respawn K] [--record] \
+        [--transport pipe|tcp] [--partition R] [--record-net]
 
 ``--grad`` switches workers from the closed-form linear gradients to
 the coded trainer's jax per-slot gradient path (heavier: each child
@@ -25,6 +26,17 @@ printout adds respawn/rejoin counts — see
 ``docs/fault_tolerance.md``).  ``--record`` regenerates the checked-in
 ``src/repro/core/recordings/harness-ge-bursty.json`` backing the
 ``recorded-harness`` trace-library scenario.
+
+``--transport tcp`` swaps the worker pipes for real sockets
+(``repro.dist.net``: length-prefixed CRC frames, id-deduped delivery,
+reconnect with bounded backoff); fault-free runs keep the bit-identical
+replay contract, and the printout adds the compute-vs-communication
+wire split.  ``--partition R`` (TCP only) cuts worker 1 off the
+network at round R for 0.8s: the supervisor classifies it PARTITIONED,
+heals it via open-round replay, and burns no respawn.  ``--record-net``
+regenerates ``src/repro/core/recordings/harness-tcp-netfault.json``
+(a TCP partition-heal run, v2 events) backing the ``recorded-netfault``
+trace-library scenario.
 """
 
 import sys
@@ -33,20 +45,33 @@ from pathlib import Path
 import numpy as np
 
 from repro.core import GilbertElliotSource, make_scheme, simulate_fast
-from repro.dist import FaultSpec, HarnessConfig, run_harness
+from repro.dist import FaultSpec, HarnessConfig, NetFaultSpec, run_harness
 
-RECORDING = (Path(__file__).resolve().parent.parent / "src" / "repro"
-             / "core" / "recordings" / "harness-ge-bursty.json")
+_REC_DIR = (Path(__file__).resolve().parent.parent / "src" / "repro"
+            / "core" / "recordings")
+RECORDING = _REC_DIR / "harness-ge-bursty.json"
+NET_RECORDING = _REC_DIR / "harness-tcp-netfault.json"
 
 
 def parse_args(argv):
-    pos, faults, compute, record, respawn = [], {}, "linear", False, 0
+    pos, faults, net_faults, compute = [], {}, {}, "linear"
+    record, record_net, respawn, transport = False, False, 0, "pipe"
     it = iter(argv)
     for a in it:
         if a == "--grad":
             compute = "grad"
         elif a == "--record":
             record = True
+        elif a == "--record-net":
+            record_net = True
+        elif a == "--transport":
+            transport = next(it, "pipe")
+            if transport not in ("pipe", "tcp"):
+                raise SystemExit(f"unknown transport {transport!r}")
+        elif a == "--partition":
+            r = int(next(it, "3"))
+            net_faults[1] = NetFaultSpec(partition_round=r,
+                                         heal_after_s=0.8)
         elif a == "--drop":
             w = int(next(it, "0"))
             faults[w] = FaultSpec(drop_rounds=frozenset(range(1, 100, 3)))
@@ -57,7 +82,12 @@ def parse_args(argv):
             respawn = int(next(it, "2"))
         else:
             pos.append(int(a))
-    return pos, faults, compute, record, respawn
+    if record_net and not net_faults:
+        net_faults[1] = NetFaultSpec(partition_round=3, heal_after_s=0.8)
+    if record_net or net_faults:
+        transport = "tcp"       # partitions only exist on the wire
+    return (pos, faults, net_faults, compute, record, record_net,
+            respawn, transport)
 
 
 def model_cfg_for_grad():
@@ -69,24 +99,33 @@ def model_cfg_for_grad():
 
 
 def main(argv):
-    pos, faults, compute, record, respawn = parse_args(argv)
+    (pos, faults, net_faults, compute, record, record_net, respawn,
+     transport) = parse_args(argv)
     n = pos[0] if pos else 8
     jobs = pos[1] if len(pos) > 1 else 12
     src = GilbertElliotSource(n=n, seed=0, p_ns=0.09, p_sn=0.5,
                               slow_factor=6.0, jitter=0.05)
     delays = src.sample_delays(jobs + 8)
-    kw = dict(alpha=src.alpha, time_scale=0.02, seed=0, faults=faults)
+    kw = dict(alpha=src.alpha, time_scale=0.02, seed=0, faults=faults,
+              transport=transport, net_faults=net_faults)
     if respawn:
         kw.update(respawn_max_attempts=respawn, respawn_backoff_s=0.1,
                   respawn_backoff_max_s=1.0)
+    if net_faults:
+        # give the partition room to heal inside one round deadline
+        kw.setdefault("round_timeout", 0.25)
     if compute == "grad":
         kw.update(compute="grad", model_cfg=model_cfg_for_grad(),
                   batch_size=32, seq_len=8, decode_atol=1e-3)
 
     print(f"# {n} worker processes, {jobs} jobs, GE-bursty trace"
-          f" (compute={compute})")
-    for name, params in [("gc", {"s": 1}),
-                         ("m-sgc", {"B": 1, "W": 3, "lam": n})]:
+          f" (compute={compute}, transport={transport})")
+    schemes = [("gc", {"s": 1}), ("m-sgc", {"B": 1, "W": 3, "lam": n})]
+    if net_faults:
+        # the bursty design model makes the gate deterministically
+        # block on the partitioned worker — the scenario the flag shows
+        schemes = [("m-sgc", {"B": 1, "W": 3, "lam": n})]
+    for name, params in schemes:
         res = run_harness(name, n, jobs, delays, params=params,
                           config=HarnessConfig(**kw))
         if res.aborted:
@@ -95,23 +134,31 @@ def main(argv):
         sim = simulate_fast(make_scheme(name, n, jobs, **params), delays,
                             mu=1.0, alpha=src.alpha, J=jobs)
         # the bit-identical replay contract holds on fault-free runs;
-        # injected kills/drops intentionally diverge from the plan
-        replay = ("n/a (faults)" if faults else
+        # injected kills/drops/partitions intentionally diverge
+        replay = ("n/a (faults)" if faults or net_faults else
                   "OK" if np.array_equal(res.trace_model.pattern,
                                          sim.effective_pattern)
                   else "MISMATCH")
+        wc = res.ledger.worker_counters()
+        wire = sum(wc["wire_send_s"]) + sum(wc["wire_recv_s"])
         print(f"{name:6s} measured {res.measured_makespan:6.3f}s  "
               f"analytic {res.analytic_makespan:6.3f}s  "
               f"agreement {res.agreement:5.3f}  "
               f"decode_err {res.decode_max_err:.1e}  "
               f"replay={replay}  "
               f"waitouts={res.waitouts} retries={res.retries} "
-              f"deaths={res.deaths}"
+              f"deaths={res.deaths}  wire {wire:.3f}s"
               + (f" respawns={res.respawns} rejoins={res.rejoins}"
-                 if respawn else ""))
+                 if respawn else "")
+              + (f" partitions={res.partitions} heals={res.heals}"
+                 if net_faults else ""))
         if record and name == "gc" and not faults:
             RECORDING.write_text(res.trace_model.to_json(indent=1) + "\n")
             print(f"       recorded -> {RECORDING}")
+        if record_net and net_faults:
+            NET_RECORDING.write_text(res.trace_model.to_json(indent=1)
+                                     + "\n")
+            print(f"       recorded -> {NET_RECORDING}")
 
 
 if __name__ == "__main__":

@@ -1516,7 +1516,13 @@ def trace_library(
     * ``recorded-harness`` — :class:`TraceModel` replaying the
       checked-in pattern a real ``repro.dist`` master/worker run
       recorded (see :func:`load_recorded_harness`), tiled cyclically to
-      the requested fleet.
+      the requested fleet;
+    * ``recorded-netfault`` — the same replay machinery over the
+      checked-in TCP-transport recording (``harness-tcp-netfault``):
+      a real socket run through a mid-run network partition that healed
+      (the v2 ``events`` carry the partition/heal transitions), so the
+      sweep sees the straggler texture a partitioned-then-healed fleet
+      actually produced.
     """
 
     def _stack(mk):
@@ -1554,6 +1560,13 @@ def trace_library(
         slow_factor=rec0.slow_factor, jitter=rec0.jitter,
         compute_scale=rec0.compute_scale, seed=seed + 10 * k + 5,
     ))
+    net0 = load_recorded_harness("harness-tcp-netfault", n=n,
+                                 rounds=rounds)
+    netfault = _stack(lambda k: TraceModel(
+        net0.pattern, base_time=net0.base_time,
+        slow_factor=net0.slow_factor, jitter=net0.jitter,
+        compute_scale=net0.compute_scale, seed=seed + 10 * k + 6,
+    ))
     # the GE source's calibrated slope; the Lambda/replay scenarios
     # read their own generators' .alpha so a retuned compute scale can
     # never drift from the delays it synthesized
@@ -1571,6 +1584,8 @@ def trace_library(
                  "recorded diagonal-wave pattern replay"),
         Scenario("recorded-harness", recorded, rec0.alpha,
                  "real master/worker harness recording replay"),
+        Scenario("recorded-netfault", netfault, net0.alpha,
+                 "TCP harness recording: partition healed mid-run"),
     ]
 
 

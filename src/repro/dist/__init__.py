@@ -14,16 +14,28 @@ from .chaos import (
     delayed_rejoin,
     flapping,
     kill_wave,
+    lossy_network,
+    partition_heal,
     regional_outage,
     run_campaign,
 )
-from .injection import FaultSpec, enact_delay
+from .injection import FaultSpec, NetFaultSpec, enact_delay
 from .master import (
     HarnessConfig,
     HarnessError,
     HarnessResult,
     degrade_params,
     run_harness,
+)
+from .net import (
+    FrameDecoder,
+    FrameError,
+    MidFilter,
+    NetConnection,
+    TcpHost,
+    TcpWorkerLink,
+    encode_frame,
+    start_worker_tcp,
 )
 from .supervisor import RespawnPolicy, Supervisor
 from .telemetry import RoundRecord, RunLedger, WorkerRoundStat
@@ -38,7 +50,18 @@ from .worker import TaskComputer, WorkerSetup, linear_job_data, worker_main
 
 __all__ = [
     "FaultSpec",
+    "NetFaultSpec",
     "enact_delay",
+    "FrameDecoder",
+    "FrameError",
+    "MidFilter",
+    "NetConnection",
+    "TcpHost",
+    "TcpWorkerLink",
+    "encode_frame",
+    "start_worker_tcp",
+    "partition_heal",
+    "lossy_network",
     "HarnessConfig",
     "HarnessError",
     "HarnessResult",

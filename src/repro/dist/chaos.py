@@ -22,10 +22,13 @@ report every broken invariant at once (the ``chaos`` bench and
 ``tests/test_dist_elastic.py`` assert ``report.passed``).
 
 Builders (``kill_wave``, ``regional_outage``, ``flapping``,
-``delayed_rejoin``) cover the canonical scenarios; campaigns are plain
-dataclasses, so bespoke ones are one literal away.  See
-``docs/fault_tolerance.md`` for how each scenario exercises the
-supervision state machine.
+``delayed_rejoin``) cover the canonical process-fault scenarios;
+``partition_heal`` and ``lossy_network`` run on the TCP transport and
+exercise the network-fault tier (``repro.dist.net``): partitions must
+be told apart from deaths (healing with NO respawn burned) and a lossy
+wire must never corrupt a decode.  Campaigns are plain dataclasses, so
+bespoke ones are one literal away.  See ``docs/fault_tolerance.md``
+for how each scenario exercises the supervision state machine.
 """
 
 from __future__ import annotations
@@ -34,7 +37,7 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
-from .injection import FaultSpec
+from .injection import FaultSpec, NetFaultSpec
 from .master import HarnessConfig, HarnessResult, run_harness
 
 
@@ -54,9 +57,14 @@ class ChaosCampaign:
     respawn_backoff_max_s: float = 1.0
     degrade: str = "off"
     expect_abort: bool = False
+    transport: str = "pipe"                             # "pipe" | "tcp"
+    net_faults: dict = field(default_factory=dict)      # wid -> NetFaultSpec
     min_respawns: int = 0
     min_rejoins: int = 0
     min_degrades: int = 0
+    min_partitions: int = 0
+    min_heals: int = 0
+    max_respawns: int | None = None     # spurious-respawn ceiling
     note: str = ""
     config_kw: dict = field(default_factory=dict)       # extra HarnessConfig
 
@@ -84,6 +92,8 @@ class CampaignReport:
             "deaths": res.deaths,
             "respawns": res.respawns,
             "rejoins": res.rejoins,
+            "partitions": res.partitions,
+            "heals": res.heals,
             "degraded": res.degraded,
             "aborted": res.aborted,
         }
@@ -180,6 +190,67 @@ def delayed_rejoin(n: int, jobs: int, worker: int, at_round: int,
     )
 
 
+def partition_heal(n: int, jobs: int, worker: int, *, at_round: int = 3,
+                   heal_s: float = 0.8, mode: str = "twoway",
+                   **kw) -> ChaosCampaign:
+    """One worker drops off the network mid-run and comes back: from
+    ``at_round`` its TCP link goes dark (``mode`` picks whether the
+    master->worker direction stays open) and heals ``heal_s`` seconds
+    later.  The supervisor must classify it PARTITIONED (the process is
+    alive), block the gate on the heal, and take the worker back via
+    the open-round replay with ZERO respawns — the acceptance gate for
+    partition-vs-death discrimination."""
+    kw = _bursty_defaults(n, kw)
+    kw.setdefault("min_partitions", 1)
+    kw.setdefault("min_heals", 1)
+    kw.setdefault("max_respawns", 0)
+    kw.setdefault("respawn_max_attempts", 3)  # a budget exists — unused
+    return ChaosCampaign(
+        name=kw.pop("name", "partition-heal"),
+        n=n, jobs=jobs,
+        transport="tcp",
+        net_faults={worker: NetFaultSpec(
+            partition_round=at_round, heal_after_s=heal_s,
+            partition_mode=mode,
+        )},
+        note=f"worker {worker} partitioned ({mode}) at round {at_round}, "
+             f"heals after {heal_s}s; no respawn allowed",
+        **kw,
+    )
+
+
+def lossy_network(n: int, jobs: int, *, latency_s: float = 0.015,
+                  jitter_s: float = 0.01, drop_p: float = 0.05,
+                  dup_p: float = 0.05, reorder_p: float = 0.1,
+                  **kw) -> ChaosCampaign:
+    """Every link is bad at once: added latency with jitter plus
+    probabilistic drop / duplicate / reorder on every frame.  The
+    timeout/resend tier plus mid-filter dedup must deliver every decode
+    exactly despite the wire — the generic lossy-datacenter scenario."""
+    kw.setdefault("scheme", "gc")
+    kw.setdefault("params", {"s": 1})
+    cfg_kw = dict(kw.pop("config_kw", {}))
+    # drops eat both directions: give the resend tier budget to win
+    cfg_kw.setdefault("max_retries", 4)
+    cfg_kw.setdefault("round_timeout", 0.3)
+    faults = {
+        w: NetFaultSpec(latency_s=latency_s, latency_jitter_s=jitter_s,
+                        drop_p=drop_p, dup_p=dup_p, reorder_p=reorder_p,
+                        seed=w + 1)
+        for w in range(n)
+    }
+    return ChaosCampaign(
+        name=kw.pop("name", "lossy-network"),
+        n=n, jobs=jobs,
+        transport="tcp",
+        net_faults=faults,
+        config_kw=cfg_kw,
+        note=f"all links lossy: +{latency_s * 1e3:.0f}ms(±{jitter_s * 1e3:.0f}) "
+             f"drop={drop_p} dup={dup_p} reorder={reorder_p}",
+        **kw,
+    )
+
+
 # ---------------------------------------------------------------------------
 # execution + audit
 # ---------------------------------------------------------------------------
@@ -203,7 +274,7 @@ def run_campaign(camp: ChaosCampaign, *, time_scale: float = 0.02,
     """Execute ``camp`` on the real harness and audit the invariants."""
     rounds = camp.jobs + 8
     delays = _delays_for(camp, rounds, seed)
-    cfg = HarnessConfig(
+    cfg_kw = dict(
         alpha=8.0,
         time_scale=time_scale,
         seed=seed,
@@ -214,8 +285,11 @@ def run_campaign(camp: ChaosCampaign, *, time_scale: float = 0.02,
         respawn_backoff_s=camp.respawn_backoff_s,
         respawn_backoff_max_s=camp.respawn_backoff_max_s,
         degrade=camp.degrade,
-        **camp.config_kw,
+        transport=camp.transport,
+        net_faults=dict(camp.net_faults),
     )
+    cfg_kw.update(camp.config_kw)   # campaign overrides win
+    cfg = HarnessConfig(**cfg_kw)
     res = run_harness(camp.scheme, camp.n, camp.jobs, delays,
                       params=dict(camp.params), config=cfg)
     return CampaignReport(campaign=camp.name, result=res,
@@ -261,4 +335,13 @@ def _audit(camp: ChaosCampaign, res: HarnessResult) -> list:
     if res.degraded < camp.min_degrades:
         v.append(f"degrades {res.degraded} < expected "
                  f">={camp.min_degrades}")
+    if res.partitions < camp.min_partitions:
+        v.append(f"partitions {res.partitions} < expected "
+                 f">={camp.min_partitions}")
+    if res.heals < camp.min_heals:
+        v.append(f"heals {res.heals} < expected >={camp.min_heals}")
+    if camp.max_respawns is not None and res.respawns > camp.max_respawns:
+        v.append(f"spurious respawns: {res.respawns} > "
+                 f"allowed {camp.max_respawns} (partition must heal, "
+                 "not respawn)")
     return v

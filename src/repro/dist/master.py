@@ -112,6 +112,10 @@ class HarnessConfig:
     seed: int = 0
     faults: dict = field(default_factory=dict)   # worker -> FaultSpec
     start_method: str = "spawn"
+    # -- transport (repro.dist.net; docs/fault_tolerance.md) --------------
+    transport: str = "pipe"             # "pipe" | "tcp"
+    net_faults: dict = field(default_factory=dict)  # wid -> NetFaultSpec
+    partition_timeout_s: float = 10.0   # partition -> death escalation
     model_cfg: object = None            # grad mode only
     batch_size: int = 0
     seq_len: int = 8
@@ -139,6 +143,7 @@ class HarnessConfig:
             jitter=self.respawn_jitter,
             ready_timeout_s=self.respawn_ready_timeout_s,
             heartbeat_s=self.heartbeat_s,
+            partition_timeout_s=self.partition_timeout_s,
         )
 
 
@@ -164,6 +169,8 @@ class HarnessResult:
     abort_reason: str | None = None
     respawns: int = 0                   # replacement processes spawned
     rejoins: int = 0                    # replacements that reached ready
+    partitions: int = 0                 # partition detections (TCP)
+    heals: int = 0                      # partitions healed without respawn
     degraded: int = 0                   # shrink re-selections performed
     stopped: bool = False               # stop_after_round fired
     checkpoint_path: str | None = None  # latest checkpoint written
@@ -523,6 +530,8 @@ class _MasterLoop:
             events=self.ledger.events,
             lost=self.initial_lost,
             seed=cfg.seed,
+            transport=cfg.transport,
+            net_faults=cfg.net_faults,
         )
         if self._rng_state is not None:
             self.sup.rng.bit_generator.state = self._rng_state
@@ -579,6 +588,8 @@ class _MasterLoop:
             abort_reason=abort_reason,
             respawns=int(sum(wc["respawns"])),
             rejoins=int(sum(wc["rejoins"])),
+            partitions=int(sum(wc["partitions"])),
+            heals=int(sum(wc["heals"])),
             degraded=self.epochs_started - 1,
             stopped=self.stopped,
             checkpoint_path=self.ckpt_written,
@@ -649,6 +660,14 @@ class _MasterLoop:
                     st.recv = tel.get("recv")
                     st.compute_s = tel.get("compute_s")
                     st.delay_s = tel.get("delay_s")
+                    # compute/communication split: the worker measures
+                    # the dispatch leg; the return leg comes from the
+                    # TCP frame timestamp (or the worker's send stamp)
+                    st.wire_send_s = tel.get("wire_s")
+                    lag = msg.get("_wire_lag")
+                    if lag is None and tel.get("sent") is not None:
+                        lag = st.reported - tel["sent"]
+                    st.wire_recv_s = lag
                     round_values[logical[p]] = msg["values"]
             down = sup.down_mask()[surv]
             # a worker whose result for THIS round is already in hand

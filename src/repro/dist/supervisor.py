@@ -9,12 +9,14 @@ a per-worker state machine::
     alive --silence--> suspect --pong/result--> alive
       |                   |
       +--process death / retries exhausted--> dead
-                                               | backoff elapsed,
-                                               | attempts < budget
-                                               v
-                                          respawning --ready--> alive
-                                               |                 ("rejoin")
-                                               +--budget out--> lost
+      |                                        | backoff elapsed,
+      | unreachable but                        | attempts < budget
+      | process alive                          v
+      | (TCP only)                        respawning --ready--> alive
+      v                                        |                 ("rejoin")
+  partitioned --any message--> alive           +--budget out--> lost
+      |        ("heal": open round replayed, NO respawn)
+      +--partition_timeout_s--> dead (respawn path as usual)
 
 * **Heartbeats** ride the existing Pipe protocol: when a worker the
   master is waiting on has been silent past ``heartbeat_s`` the
@@ -32,6 +34,18 @@ a per-worker state machine::
   replays the entries still in flight (``t >= current round``) so the
   replacement serves the open round immediately instead of idling
   until the next dispatch.
+* **Partitioned vs dead** (TCP transport): when a worker is
+  unreachable but its *process* is demonstrably alive
+  (``link.peer_alive()``), declaring it dead would be wrong — it is
+  behind a network partition.  The supervisor parks it in
+  *partitioned*: not schedulable, but no respawn is burned.  It keeps
+  pinging through the partition; the first message back (a pong, a
+  held result flushing) *heals* the worker — back to *alive* with the
+  open round replayed from the dispatch ledger, exactly the rejoin
+  path minus the respawn.  A partition outlasting
+  ``partition_timeout_s`` escalates to the normal death/respawn path.
+  Split-brain safe: the master remains the sole gate authority, and
+  the TCP host refuses stale-incarnation connections outright.
 * **Retire/lost**: budget exhaustion (or an explicit
   :meth:`Supervisor.retire` during adaptive degradation) parks the
   worker in *lost* — never scheduled, never respawned.
@@ -52,6 +66,7 @@ from .transport import WorkerLink, start_worker
 
 ALIVE = "alive"
 SUSPECT = "suspect"
+PARTITIONED = "partitioned"  # unreachable, process alive (TCP only)
 DEAD = "dead"              # death detected, respawn scheduled
 RESPAWNING = "respawning"  # replacement spawned, awaiting ready
 LOST = "lost"              # permanent: budget exhausted or retired
@@ -67,6 +82,7 @@ class RespawnPolicy:
     jitter: float = 0.25           # +- fraction of the backoff
     ready_timeout_s: float = 60.0  # respawn that never reports ready
     heartbeat_s: float = 0.5       # silence before a ping / suspicion
+    partition_timeout_s: float = 10.0  # partition -> death escalation
 
     def backoff(self, attempt: int, rng: np.random.Generator) -> float:
         base = min(self.backoff_s * (2.0 ** attempt), self.backoff_max_s)
@@ -89,7 +105,11 @@ class Supervisor:
                  start_method: str = "spawn",
                  events: list | None = None,
                  lost: set[int] | None = None,
-                 seed: int = 0):
+                 seed: int = 0,
+                 transport: str = "pipe",
+                 net_faults: dict | None = None):
+        if transport not in ("pipe", "tcp"):
+            raise ValueError(f"unknown transport {transport!r}")
         self.n = n
         self.target = target
         self.setup_for = setup_for
@@ -98,7 +118,15 @@ class Supervisor:
         self.start_method = start_method
         self.events = events if events is not None else []
         self.rng = np.random.default_rng([seed, 0x5eed])
+        self.seed = seed
         self.round = 0
+        self.transport = transport
+        self.net_faults = dict(net_faults or {})
+        self.host = None
+        if transport == "tcp":
+            from .net import TcpHost
+
+            self.host = TcpHost()
         lost = lost or set()
         self.links: list[WorkerLink | None] = [None] * n
         self.state = [LOST if i in lost else ALIVE for i in range(n)]
@@ -106,19 +134,42 @@ class Supervisor:
         self.respawns = [0] * n
         self.death_count = [0] * n
         self.pings = [0] * n
+        self.partition_count = [0] * n
+        self.heal_count = [0] * n
         now = time.perf_counter()
         self.last_seen = [now] * n
         self.last_ping = [0.0] * n
         self.next_try = [0.0] * n
         self.ready_deadline = [0.0] * n
+        self.partition_since = [0.0] * n
         #: most recent round dispatch per worker: wid -> (t, message)
         self._ledger: dict[int, tuple[int, dict]] = {}
         self._results: list[tuple[int, dict]] = []
         for i in range(n):
             if self.state[i] != LOST:
-                self.links[i] = start_worker(
-                    i, target, setup_for(i), start_method=start_method
-                )
+                self.links[i] = self._spawn(i, setup_for(i))
+
+    def _spawn(self, i: int, setup):
+        """Transport-aware process launch (initial fleet + respawns);
+        TCP respawns carry the attempt count as their incarnation so
+        the host can refuse the predecessor's stale reconnects.  Net
+        faults afflict the FIRST incarnation only: escalating a
+        partition to a respawn models replacing the unreachable
+        machine, so the replacement starts with a clean wire (the
+        compute-side analogue is ``respawn_setup_for``)."""
+        if self.transport == "tcp":
+            from .net import start_worker_tcp
+
+            return start_worker_tcp(
+                self.host, i, self.target, setup,
+                incarnation=self.attempts[i],
+                fault=self.net_faults.get(i) if self.attempts[i] == 0
+                else None,
+                seed=self.seed,
+                start_method=self.start_method,
+            )
+        return start_worker(i, self.target, setup,
+                            start_method=self.start_method)
 
     # -- queries ---------------------------------------------------------
     def available(self, i: int) -> bool:
@@ -126,8 +177,9 @@ class Supervisor:
         return self.state[i] in (ALIVE, SUSPECT)
 
     def recoverable(self, i: int) -> bool:
-        """Down, but a respawn is scheduled or in flight."""
-        return self.state[i] in (DEAD, RESPAWNING)
+        """Down, but recovery is plausible: a respawn scheduled or in
+        flight, or a partition that may still heal."""
+        return self.state[i] in (DEAD, RESPAWNING, PARTITIONED)
 
     def down_mask(self) -> np.ndarray:
         """(n,) bool: True where the worker cannot serve this instant."""
@@ -147,11 +199,16 @@ class Supervisor:
             "respawns": list(self.respawns),
             "deaths": list(self.death_count),
             "pings": list(self.pings),
+            "partitions": list(self.partition_count),
+            "heals": list(self.heal_count),
         }
 
     # -- lifecycle -------------------------------------------------------
     def begin_round(self, t: int) -> None:
         self.round = t
+        for lk in self.links:
+            if lk is not None and lk.reconnectable:
+                lk.set_round(t)
 
     def await_ready(self, timeout: float = 120.0) -> None:
         """Initial readiness handshake: block until every non-lost
@@ -202,8 +259,20 @@ class Supervisor:
                 )
 
     def mark_dead(self, i: int, *, reason: str = "") -> None:
-        """Declare a worker down and schedule (or exhaust) its respawn."""
+        """Declare a worker unreachable.  When the link can reconnect
+        and the worker *process* is demonstrably alive, that is a
+        partition, not a death — no respawn is burned; the heal path or
+        the ``partition_timeout_s`` escalation in :meth:`tick` settles
+        it.  Otherwise: schedule (or exhaust) the respawn."""
         if self.state[i] in (DEAD, RESPAWNING, LOST):
+            return
+        lk = self.links[i]
+        if (self.state[i] != PARTITIONED and lk is not None
+                and lk.reconnectable and lk.peer_alive()):
+            self.state[i] = PARTITIONED
+            self.partition_since[i] = time.perf_counter()
+            self.partition_count[i] += 1
+            self._event("partition", i, note=reason)
             return
         self.death_count[i] += 1
         self._event("death", i, note=reason)
@@ -220,7 +289,7 @@ class Supervisor:
 
     def give_up(self, i: int) -> None:
         """Hard-deadline escalation: stop waiting on a recovery."""
-        if self.state[i] in (DEAD, RESPAWNING):
+        if self.state[i] in (DEAD, RESPAWNING, PARTITIONED):
             self._retire_link(i)
             self.state[i] = LOST
             self._event("lost", i, note="recovery deadline passed")
@@ -237,6 +306,7 @@ class Supervisor:
         """One supervision step: fire due respawns, time out stalled
         rejoins, and heartbeat the workers the master is blocked on."""
         now = time.perf_counter()
+        hb = self.policy.heartbeat_s
         for i in range(self.n):
             st = self.state[i]
             if st == DEAD and now >= self.next_try[i]:
@@ -249,7 +319,22 @@ class Supervisor:
                     self.mark_dead(i, reason="respawn died before ready")
                 elif now > self.ready_deadline[i]:
                     self.give_up(i)
-        hb = self.policy.heartbeat_s
+            elif st == PARTITIONED:
+                lk = self.links[i]
+                if lk is None or not lk.peer_alive():
+                    self.mark_dead(i, reason="partitioned process died")
+                elif (now - self.partition_since[i]
+                        > self.policy.partition_timeout_s):
+                    # unreachable past the suspicion deadline: kill the
+                    # stranded process and take the normal respawn path
+                    lk.kill()
+                    self.mark_dead(i, reason="partition timeout")
+                elif (now - self.last_ping[i] > hb):
+                    # keep probing THROUGH the partition: the first
+                    # ping that gets a pong back is the heal signal
+                    if lk.send({"kind": "ping", "seq": self.round}):
+                        self.last_ping[i] = now
+                        self.pings[i] += 1
         for i in waiting_on:
             if (self.state[i] == ALIVE and now - self.last_seen[i] > hb
                     and now - self.last_ping[i] > hb):
@@ -270,6 +355,9 @@ class Supervisor:
             while (msg := lk.try_recv()) is not None:
                 kind = msg.get("kind")
                 self.last_seen[i] = time.perf_counter()
+                if self.state[i] == PARTITIONED:
+                    # any message through the wire IS the heal signal
+                    self._heal(i)
                 if kind == "ready":
                     if self.state[i] == RESPAWNING:
                         self._rejoin(i)
@@ -288,6 +376,8 @@ class Supervisor:
         for lk in self.links:
             if lk is not None:
                 lk.stop()
+        if self.host is not None:
+            self.host.close()
 
     # -- internals -------------------------------------------------------
     def _event(self, kind: str, worker: int, *, note: str = "") -> None:
@@ -311,26 +401,37 @@ class Supervisor:
         self.attempts[i] += 1
         self.respawns[i] += 1
         self._event("respawn", i, note=f"attempt {self.attempts[i]}")
-        self.links[i] = start_worker(
-            i, self.target, self._setup(i), start_method=self.start_method
-        )
+        self.links[i] = self._spawn(i, self._setup(i))
         self.state[i] = RESPAWNING
         self.ready_deadline[i] = (
             time.perf_counter() + self.policy.ready_timeout_s
         )
 
-    def _rejoin(self, i: int) -> None:
-        self.state[i] = ALIVE
-        self.last_seen[i] = time.perf_counter()
-        self._event("rejoin", i)
-        # replay the open round from the assignment ledger so the
-        # replacement serves it immediately (attempt=1: resend
-        # semantics, exempt from first-attempt drop faults)
+    def _replay_open(self, i: int) -> None:
+        """Replay the open round from the assignment ledger so the
+        returning worker serves it immediately (attempt=1: resend
+        semantics, exempt from first-attempt drop faults)."""
         entry = self._ledger.get(i)
         if entry is not None and entry[0] >= self.round:
             msg = dict(entry[1])
             msg["attempt"] = max(1, int(msg.get("attempt", 0)))
             self.links[i].send(msg)
+
+    def _rejoin(self, i: int) -> None:
+        self.state[i] = ALIVE
+        self.last_seen[i] = time.perf_counter()
+        self._event("rejoin", i)
+        self._replay_open(i)
+
+    def _heal(self, i: int) -> None:
+        """A partitioned worker reached us again: back to the fleet
+        with the open round replayed — same catch-up as a rejoin, but
+        the SAME process and no respawn burned."""
+        self.state[i] = ALIVE
+        self.last_seen[i] = time.perf_counter()
+        self.heal_count[i] += 1
+        self._event("heal", i)
+        self._replay_open(i)
 
     def _wait(self, ids, timeout: float) -> None:
         from .transport import wait_any

@@ -35,6 +35,8 @@ class WorkerRoundStat:
     recv: float | None = None           # worker: work received
     compute_s: float | None = None      # worker: real chunk-grad time
     delay_s: float | None = None        # worker: enacted injected delay
+    wire_send_s: float | None = None    # master->worker wire seconds
+    wire_recv_s: float | None = None    # worker->master wire seconds
     attempts: int = 0
 
 
@@ -120,13 +122,23 @@ class RunLedger:
     def worker_counters(self) -> dict:
         """Per-worker flakiness counters for the bench JSON artifacts:
         resends (retry attempts beyond the first send), deaths,
-        respawns, and rejoins, each a length-``n`` list."""
+        respawns, rejoins, partitions, heals (each a length-``n``
+        list), plus the compute-vs-communication split: ``wire_send_s``
+        / ``wire_recv_s`` are each worker's summed master->worker /
+        worker->master wire seconds over the run."""
         resends = [0] * self.n
+        wire_send = [0.0] * self.n
+        wire_recv = [0.0] * self.n
         for rec in self.records:
             for i, st in enumerate(rec.stats):
                 resends[i] += max(0, st.attempts - 1)
+                if st.wire_send_s is not None:
+                    wire_send[i] += st.wire_send_s
+                if st.wire_recv_s is not None:
+                    wire_recv[i] += st.wire_recv_s
         by_kind = {"death": [0] * self.n, "respawn": [0] * self.n,
-                   "rejoin": [0] * self.n}
+                   "rejoin": [0] * self.n, "partition": [0] * self.n,
+                   "heal": [0] * self.n}
         for ev in self.events:
             k, w = ev.get("kind"), ev.get("worker")
             if k in by_kind and w is not None and 0 <= w < self.n:
@@ -136,6 +148,10 @@ class RunLedger:
             "deaths": by_kind["death"],
             "respawns": by_kind["respawn"],
             "rejoins": by_kind["rejoin"],
+            "partitions": by_kind["partition"],
+            "heals": by_kind["heal"],
+            "wire_send_s": wire_send,
+            "wire_recv_s": wire_recv,
         }
 
     def to_trace_model(self, *, base_time: float = 1.0,
@@ -171,6 +187,10 @@ class RunLedger:
             "deaths": sorted({w for r in self.records for w in r.deaths}),
             "respawns": int(sum(wc["respawns"])),
             "rejoins": int(sum(wc["rejoins"])),
+            "partitions": int(sum(wc["partitions"])),
+            "heals": int(sum(wc["heals"])),
+            "wire_send_s": float(sum(wc["wire_send_s"])),
+            "wire_recv_s": float(sum(wc["wire_recv_s"])),
             "mean_round_overhead_s": self.overhead_s(),
         }
 
@@ -218,6 +238,8 @@ class RunLedger:
             "recv": stamp(lambda s: s.recv),
             "compute_s": stamp(lambda s: s.compute_s),
             "delay_s": stamp(lambda s: s.delay_s),
+            "wire_send_s": stamp(lambda s: s.wire_send_s),
+            "wire_recv_s": stamp(lambda s: s.wire_recv_s),
             "attempts": np.array(
                 [[st.attempts for st in r.stats] for r in self.records],
                 dtype=np.int64,
@@ -235,6 +257,16 @@ class RunLedger:
         def opt(a):
             return None if np.isnan(a) else float(a)
 
+        def grid(key):
+            # wire stamps postdate the v1 checkpoint layout: absent ->
+            # all-NaN, so pre-wire checkpoints still restore
+            a = state.get(key)
+            if a is None:
+                return np.full((R, n), np.nan)
+            return np.asarray(a)
+
+        wire_send = grid("wire_send_s")
+        wire_recv = grid("wire_recv_s")
         for k in range(R):
             rec = led.new_round(int(state["t"][k]),
                                 float(state["start"][k]))
@@ -255,5 +287,7 @@ class RunLedger:
                 st.recv = opt(state["recv"][k][i])
                 st.compute_s = opt(state["compute_s"][k][i])
                 st.delay_s = opt(state["delay_s"][k][i])
+                st.wire_send_s = opt(wire_send[k][i])
+                st.wire_recv_s = opt(wire_recv[k][i])
                 st.attempts = int(state["attempts"][k][i])
         return led

@@ -22,12 +22,24 @@ policy.
 from __future__ import annotations
 
 import multiprocessing as mp
+import multiprocessing.connection  # noqa: F401  (mp.connection.wait)
 import time
 from typing import Any, Callable
 
 
 class WorkerLink:
-    """Master-side handle on one worker process."""
+    """Master-side handle on one worker process.
+
+    The link *surface* (``alive`` / ``send`` / ``try_recv`` / ``drain``
+    / ``stop`` / ``kill`` plus the ``reconnectable`` / ``peer_alive`` /
+    ``waitable`` probes below) is the transport contract: the TCP
+    backend (``repro.dist.net.TcpWorkerLink``) implements the same
+    surface, and the supervisor/master never look behind it."""
+
+    #: a pipe dies with its process: losing it is losing the worker.
+    #: The TCP backend overrides this — there, an unreachable peer may
+    #: merely be partitioned.
+    reconnectable = False
 
     def __init__(self, worker_id: int, process, conn):
         self.worker_id = worker_id
@@ -38,12 +50,32 @@ class WorkerLink:
     def alive(self) -> bool:
         return not self.broken and self.process.is_alive()
 
+    def peer_alive(self) -> bool:
+        """Is the worker *process* up (reachable or not)?"""
+        return self.process.is_alive()
+
+    def waitable(self):
+        """The selectable object ``wait_any`` blocks on (None: none)."""
+        return self.conn
+
+    def has_ready(self) -> bool:
+        """Deliverable message already queued (deferred-delivery
+        backends); the pipe backend lets ``connection.wait`` decide."""
+        return False
+
+    def next_due(self) -> float | None:
+        """Earliest future delivery deadline, if any (caps the
+        ``wait_any`` sleep for latency-injecting backends)."""
+        return None
+
     def send(self, msg: dict) -> bool:
         """Best-effort send; returns False (and marks the link broken)
-        when the peer is gone."""
+        when the peer is gone.  Stamps ``msg["_sent"]`` (master clock)
+        so the worker can split wire time from compute time."""
         if self.broken:
             return False
         try:
+            msg["_sent"] = time.perf_counter()
             self.conn.send(msg)
             return True
         except (BrokenPipeError, EOFError, OSError, ValueError):
@@ -146,12 +178,32 @@ def stop_workers(links: list[WorkerLink]) -> None:
 
 def wait_any(links: list[WorkerLink], timeout: float) -> None:
     """Block until some link has data (or ``timeout`` elapses) without
-    spinning: a poor man's ``MPI.Waitany`` on connection objects."""
-    conns = [lk.conn for lk in links if not lk.broken]
-    if not conns:
+    spinning: a poor man's ``MPI.Waitany`` on connection objects.
+
+    Transport-agnostic via the link probes: returns immediately when a
+    deferred-delivery backend already holds a due message, waits on
+    each link's ``waitable()`` (pipe connection or socket — both are
+    selectable), and never sleeps past the earliest ``next_due()``
+    deadline a latency-injecting backend advertises."""
+    now = time.perf_counter()
+    deadline = now + timeout
+    waitables = []
+    for lk in links:
+        if lk.broken:
+            continue
+        if lk.has_ready():
+            return
+        w = lk.waitable()
+        if w is not None:
+            waitables.append(w)
+        nd = lk.next_due()
+        if nd is not None:
+            deadline = min(deadline, nd)
+    timeout = max(0.0, deadline - now)
+    if not waitables:
         time.sleep(timeout)
         return
     try:
-        mp.connection.wait(conns, timeout)
+        mp.connection.wait(waitables, timeout)
     except OSError:
         time.sleep(min(timeout, 0.005))

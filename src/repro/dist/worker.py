@@ -268,6 +268,10 @@ def worker_main(conn, setup: WorkerSetup) -> None:
             continue
         t, attempt = int(msg["t"]), int(msg["attempt"])
         t_recv = time.perf_counter()
+        # master->worker wire time: the transport stamps "_sent" on the
+        # master clock at send (same perf_counter base on one host)
+        wire_s = (t_recv - float(msg["_sent"])
+                  if msg.get("_sent") is not None else None)
         if t in cache:
             # resend path: the result was computed on the first attempt
             # and only the message was lost — answer from the cache
@@ -299,6 +303,7 @@ def worker_main(conn, setup: WorkerSetup) -> None:
                     "recv": t_recv,
                     "delay_s": delay_s,
                     "compute_s": compute_s,
+                    "wire_s": wire_s,
                     "sent": time.perf_counter(),
                 },
             }

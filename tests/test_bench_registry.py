@@ -42,6 +42,17 @@ def test_tier1_runs_the_dist_exec_smoke():
     assert "dist-exec-smoke" in ci
 
 
+def test_tier1_runs_the_tcp_and_network_chaos_smokes():
+    """The socket transport and the network-fault campaigns are tier-1
+    gated (smoke variants); their full benches ride the nightly bare
+    ``benchmarks.run --json`` sweep like every non-smoke bench."""
+    ci = (REPO / ".github" / "workflows" / "ci.yml").read_text()
+    assert "dist-exec-tcp-smoke" in ci
+    assert "chaos-net-smoke" in ci
+    for full in ("dist-exec-tcp", "chaos-net"):
+        assert full in BENCHES and not full.endswith("-smoke")
+
+
 def test_list_flag_enumerates_all_benches(monkeypatch, capsys):
     monkeypatch.setattr("sys.argv", ["benchmarks.run", "--list"])
     main()                              # must not run any bench

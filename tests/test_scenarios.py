@@ -153,7 +153,7 @@ def test_trace_library_shapes_and_determinism():
     names = [sc.name for sc in lib]
     assert names == ["ge-bursty", "ge-heavy", "lambda-cold",
                      "lambda-hetero", "replayed-waves",
-                     "recorded-harness"]
+                     "recorded-harness", "recorded-netfault"]
     for sc, sc2 in zip(lib, lib2):
         assert sc.delays.shape == (num, rounds, n)
         assert (sc.delays == sc2.delays).all()      # seed-deterministic
