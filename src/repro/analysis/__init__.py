@@ -1,0 +1,47 @@
+"""repro.analysis — the repo's contract linter.
+
+AST-based static analysis that enforces the invariants the test suites
+assume but cannot economically cover: backend-shim discipline and
+tracer safety in the kernels, determinism in the simulation core,
+pickle-free checkpoints, a restricted-unpickler-only wire, concrete
+exception handling, and a balanced send/handle wire protocol.
+
+Run it as ``python -m repro.analysis`` (see ``--help``); CI runs
+``--strict`` as a tier-1 gate.  Catalog and suppression syntax:
+``docs/static_analysis.md``.
+"""
+
+from __future__ import annotations
+
+from . import rules  # noqa: F401  (import-for-registration)
+from .config import DEFAULT_CONFIG
+from .engine import (
+    RULES,
+    FileContext,
+    ProjectContext,
+    Report,
+    Rule,
+    Suppression,
+    Violation,
+    baseline_payload,
+    load_baseline,
+    register_rule,
+    run_analysis,
+    run_on_sources,
+)
+
+__all__ = [
+    "DEFAULT_CONFIG",
+    "FileContext",
+    "ProjectContext",
+    "Report",
+    "Rule",
+    "RULES",
+    "Suppression",
+    "Violation",
+    "baseline_payload",
+    "load_baseline",
+    "register_rule",
+    "run_analysis",
+    "run_on_sources",
+]

@@ -1,0 +1,169 @@
+"""Shared AST helpers for the contract rules.
+
+The kernels' staged/concrete split (docs/scheme_kernels.md "Running on
+jax") uses two lexical idioms this module recognizes so the tracer
+rules don't flag deliberately-concrete code:
+
+* a branch whose test mentions the backend's ``concrete`` flag (the
+  attribute ``.concrete`` or a local named ``conc``/``concrete``)
+  encloses concrete-only code — exempt;
+* an early guard of the form ``if not <concrete>: return ...`` means
+  everything after it in that block runs on the concrete path only —
+  the remainder is exempt too.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterable, Iterator
+
+#: attribute accesses that are static under tracing (shape metadata);
+#: names underneath them never carry traced *values* into a test.
+STATIC_ATTRS = frozenset({"shape", "ndim", "dtype"})
+
+CONCRETE_NAMES = frozenset({"conc", "concrete"})
+
+
+def iter_functions(tree: ast.AST) -> Iterator[tuple[ast.AST, str | None]]:
+    """Every (function node, enclosing class name) in ``tree``."""
+
+    def walk(node: ast.AST, cls: str | None):
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, ast.ClassDef):
+                yield from walk(child, child.name)
+            elif isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                yield child, cls
+                yield from walk(child, cls)
+            else:
+                yield from walk(child, cls)
+
+    yield from walk(tree, None)
+
+
+def func_param_names(func: ast.FunctionDef) -> list[str]:
+    a = func.args
+    params = [p.arg for p in a.posonlyargs + a.args + a.kwonlyargs]
+    if a.vararg:
+        params.append(a.vararg.arg)
+    if a.kwarg:
+        params.append(a.kwarg.arg)
+    return params
+
+
+def is_concrete_test(test: ast.AST) -> bool:
+    """Does this branch test mention the backend ``concrete`` flag?"""
+    for node in ast.walk(test):
+        if isinstance(node, ast.Attribute) and node.attr == "concrete":
+            return True
+        if isinstance(node, ast.Name) and node.id in CONCRETE_NAMES:
+            return True
+    return False
+
+
+def _terminates(body: list[ast.stmt]) -> bool:
+    return bool(body) and isinstance(
+        body[-1], (ast.Return, ast.Raise, ast.Continue, ast.Break)
+    )
+
+
+def concrete_exempt_statements(func: ast.FunctionDef) -> set[ast.stmt]:
+    """Statements of ``func`` that only run on the concrete path.
+
+    Two idioms (module docstring): subtrees of a branch whose test
+    mentions ``concrete``, and the remainder of a block after an
+    ``if not <concrete>: return`` guard.  Note the polarity of the
+    second: after ``if <concrete>: return`` the remainder is the
+    *traced* path and stays checked.
+    """
+    exempt: set[ast.stmt] = set()
+
+    def mark_all(stmts: Iterable[ast.stmt]):
+        for s in stmts:
+            exempt.add(s)
+            for child in ast.walk(s):
+                if isinstance(child, ast.stmt):
+                    exempt.add(child)
+
+    def walk_block(stmts: list[ast.stmt]):
+        guard_seen = False
+        for s in stmts:
+            if guard_seen:
+                mark_all([s])
+                continue
+            if isinstance(s, ast.If) and is_concrete_test(s.test):
+                mark_all(s.body)
+                mark_all(s.orelse)
+                if (
+                    isinstance(s.test, ast.UnaryOp)
+                    and isinstance(s.test.op, ast.Not)
+                    and _terminates(s.body)
+                    and not s.orelse
+                ):
+                    # `if not concrete: return ...` — the rest of this
+                    # block is the concrete path
+                    guard_seen = True
+                continue
+            for block in child_blocks(s):
+                walk_block(block)
+
+    walk_block(func.body)
+    return exempt
+
+
+def child_blocks(stmt: ast.stmt) -> list[list[ast.stmt]]:
+    blocks = []
+    for name in ("body", "orelse", "finalbody"):
+        block = getattr(stmt, name, None)
+        if block:
+            blocks.append(block)
+    for handler in getattr(stmt, "handlers", []) or []:
+        blocks.append(handler.body)
+    return blocks
+
+
+def names_in(node: ast.AST, *, skip_static_attrs: bool = True) -> set[str]:
+    """Free names loaded in ``node``; subtrees under shape-metadata
+    attributes (``x.shape`` etc.) are pruned when requested, since
+    those are static under tracing."""
+    out: set[str] = set()
+
+    def walk(n: ast.AST):
+        if (
+            skip_static_attrs
+            and isinstance(n, ast.Attribute)
+            and n.attr in STATIC_ATTRS
+        ):
+            return
+        if isinstance(n, ast.Name):
+            out.add(n.id)
+        for child in ast.iter_child_nodes(n):
+            walk(child)
+
+    walk(node)
+    return out
+
+
+def is_identity_test(test: ast.AST) -> bool:
+    """Tests built purely from ``is`` / ``is not`` comparisons (and
+    boolean combinations / negations of them) never call ``__bool__``
+    on a traced operand — the kernels' ``valid is False`` /
+    ``pending is None`` sentinel idiom."""
+    if isinstance(test, ast.Compare):
+        return all(isinstance(op, (ast.Is, ast.IsNot)) for op in test.ops)
+    if isinstance(test, ast.UnaryOp) and isinstance(test.op, ast.Not):
+        return is_identity_test(test.operand)
+    if isinstance(test, ast.BoolOp):
+        return all(is_identity_test(v) for v in test.values)
+    return False
+
+
+def dotted_name(node: ast.AST) -> str | None:
+    """``a.b.c`` as a string for Name/Attribute chains, else None."""
+    parts: list[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None

@@ -1,0 +1,109 @@
+"""Per-rule scope and knobs for this repo.
+
+Every rule carries its own ``files`` glob list (repo-root-relative) —
+the discipline is absolute *within* a scope rather than diluted across
+the tree.  The scopes encode where each contract actually binds:
+
+* ``backend-shim`` / ``tracer-safety`` / ``fused-contract`` bind to
+  ``core/kernel.py``, the one module whose code runs both eagerly and
+  staged.  ``core/batch.py``/``core/straggler.py`` are host-side
+  numpy simulation (never traced) and legitimately call ``np.*``
+  directly, so they are out of shim scope by design.
+* ``determinism`` splits into the no-clock core bucket and the
+  monotonic-only launch bucket.
+* ``unsafe-deserialization`` bans pickle outright under
+  ``checkpoint/`` and restricts the wire under ``dist/``.
+* ``protocol-exhaustiveness`` spans exactly the modules that touch
+  the dict-message wire protocol.
+
+``staged_functions``/``traced_params`` name the kernel entry points
+that run under jit/scan/vmap and the identifiers that carry traced
+values through them — extend both when adding a kernel with new
+staged surface.
+"""
+
+from __future__ import annotations
+
+DEFAULT_CONFIG: dict = {
+    "suppression-syntax": {
+        # parse-check every python file any rule can see, plus the
+        # rest of src/ so a stray malformed allow comment is caught
+        "files": ["src/repro/**/*.py"],
+    },
+    "backend-shim": {
+        "files": ["src/repro/core/kernel.py"],
+        # host-side setup that never runs under a trace
+        "allow_functions": ["__init__", "fused_scalars"],
+        "allow_calls": [],
+    },
+    "tracer-safety": {
+        "files": ["src/repro/core/kernel.py"],
+        "staged_functions": [
+            "step",
+            "admit_partial",
+            "admit_all",
+            "_admit_partial_traced",
+            "_member_ok",
+            "_pending",
+            "_valid",
+            "_safe_col",
+            "_mark_done",
+        ],
+        "traced_params": [
+            "state",
+            "stragglers",
+            "t",
+            "candidate",
+            "cost",
+            "cand",
+            "any_cand",
+            "row",
+            "job",
+            "valid",
+            "pending",
+            "can",
+            "bufs",
+            "alive",
+        ],
+    },
+    "fused-contract": {
+        "files": ["src/repro/core/kernel.py"],
+        "host_functions": [
+            "__init__",
+            "bind_fused",
+            "fused_scalars",
+            "init_state",
+        ],
+    },
+    "determinism": {
+        "files": [
+            "src/repro/core/*.py",
+            "src/repro/launch/*.py",
+        ],
+        "no_clock_under": ["src/repro/core/"],
+        "monotonic_only_under": ["src/repro/launch/"],
+    },
+    "unsafe-deserialization": {
+        "files": [
+            "src/repro/checkpoint/*.py",
+            "src/repro/dist/*.py",
+        ],
+        "ban_under": ["src/repro/checkpoint/"],
+        "wire_under": ["src/repro/dist/"],
+    },
+    "blanket-except": {
+        "files": [
+            "src/repro/core/*.py",
+            "src/repro/dist/*.py",
+        ],
+    },
+    "protocol-exhaustiveness": {
+        "files": [
+            "src/repro/dist/master.py",
+            "src/repro/dist/worker.py",
+            "src/repro/dist/supervisor.py",
+            "src/repro/dist/transport.py",
+            "src/repro/dist/net.py",
+        ],
+    },
+}

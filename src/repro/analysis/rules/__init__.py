@@ -1,0 +1,16 @@
+"""Contract rules.  Importing this package registers every rule with
+``repro.analysis.engine.RULES``; each module is one contract and its
+docstring is the authoritative statement of it (mirrored in
+``docs/static_analysis.md``)."""
+
+from __future__ import annotations
+
+from . import (  # noqa: F401  (import-for-registration)
+    backend_shim,
+    blanket_except,
+    deserialization,
+    determinism,
+    fused_contract,
+    protocol,
+    tracer_safety,
+)

@@ -1,0 +1,88 @@
+"""``backend-shim`` — kernel hot-loop code goes through ``core.backend``.
+
+The lockstep kernels (``core/kernel.py``) run the SAME code eagerly on
+numpy and staged through ``jax.jit``/``lax.scan`` — that only holds
+because every array op routes through the active backend (``self.bk`` /
+``bk.xp``) and every state update through the functional
+``at_set``/``at_or`` helpers.  A raw ``np.``/``jnp.`` call in a kernel
+body silently pins one backend: under jax it either host-syncs a traced
+value (hidden transfer) or breaks the trace outright; on numpy it hides
+a jax-only bug until the CI matrix job.
+
+Checks in scoped files:
+
+* module-level ``import jax`` / ``import jax.numpy`` — the engine must
+  import (and run) without jax; jax access goes through the backend
+  registry or stays function-local in explicitly staged helpers;
+* calls through a raw array-namespace alias (``np.*``, ``jnp.*``,
+  ``numpy.*``) inside function bodies, except in host-side functions
+  named by ``allow_functions`` (constructors and other never-traced
+  setup — the oracle-pinned allow-sites) and callees in
+  ``allow_calls``.
+
+Non-call attribute access (``np.ndarray`` annotations, ``np.int64``
+dtype literals, ``np.inf``) is fine: dtypes and annotations are not
+array ops.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from ..astutil import dotted_name, iter_functions
+from ..engine import Rule, Violation, register_rule
+
+_RAW_ALIASES = ("np", "jnp", "numpy", "onp")
+
+
+class BackendShimRule(Rule):
+    id = "backend-shim"
+    description = (
+        "kernel/engine modules route array ops through the core.backend "
+        "shim (bk.xp / at_set / at_or), never raw np/jnp"
+    )
+
+    def check_file(self, ctx):
+        allow_funcs = set(ctx.options.get("allow_functions", []))
+        allow_calls = set(ctx.options.get("allow_calls", []))
+        out: list[Violation] = []
+
+        for node in ctx.tree.body:
+            mods = []
+            if isinstance(node, ast.Import):
+                mods = [a.name for a in node.names]
+            elif isinstance(node, ast.ImportFrom):
+                mods = [node.module or ""]
+            for mod in mods:
+                if mod == "jax" or mod.startswith("jax."):
+                    out.append(Violation(
+                        self.id, ctx.path, node.lineno, node.col_offset,
+                        f"module-level import of {mod!r} in an engine "
+                        "module: jax access goes through the backend "
+                        "registry (core.backend)",
+                    ))
+
+        # nodes inside host-side allow-listed functions are exempt
+        allowed_nodes: set[int] = set()
+        for func, _cls in iter_functions(ctx.tree):
+            if func.name in allow_funcs:
+                for node in ast.walk(func):
+                    allowed_nodes.add(id(node))
+
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.Call) or id(node) in allowed_nodes:
+                continue
+            name = dotted_name(node.func)
+            if name is None:
+                continue
+            root, _, _rest = name.partition(".")
+            if root in _RAW_ALIASES and "." in name and name not in allow_calls:
+                out.append(Violation(
+                    self.id, ctx.path, node.lineno, node.col_offset,
+                    f"raw {name}() in kernel code pins one backend; "
+                    "use the shim (self.bk.xp / bk.at_set / bk.at_or)",
+                ))
+        return out
+
+
+register_rule(BackendShimRule())

@@ -1,0 +1,144 @@
+"""``fused-contract`` — the grid-fusion vmap protocol stays closed.
+
+``simulate_lockstep_grid`` vmaps one kernel trace over a parameter
+grid.  That works only if a kernel upholds both halves of the fused
+protocol (docs/scheme_kernels.md "Grid fusion"):
+
+1. a class that declares a non-empty ``fused_params`` (class attribute
+   or any ``self.fused_params = (...)`` assignment) must also define
+   ``bind_fused`` — otherwise the fused axes can never be rebound
+   inside the vmapped trace and the grid runner falls back to a
+   python loop silently;
+2. the fused scalar names it declares (e.g. ``s``, ``lam``) are
+   *batched tracers* inside non-host methods: using one in a
+   branch/loop test or comparing against it in a test position breaks
+   under vmap even when plain jit would have tolerated it.  Mask
+   arithmetic (``xp.where``, multiply-by-indicator) is the sanctioned
+   form.
+
+Host-side methods named in ``host_functions`` (constructors,
+``bind_fused`` itself, plotting/export helpers) are exempt, as are
+concrete-guarded regions (see tracer-safety).
+"""
+
+from __future__ import annotations
+
+import ast
+
+from ..astutil import concrete_exempt_statements, names_in
+from ..engine import Rule, Violation, register_rule
+
+
+def _mentions(node: ast.AST) -> set[str]:
+    """Plain names plus attribute tails, so both ``s`` and ``self.s``
+    resolve to the declared fused-scalar name."""
+    got = set(names_in(node))
+    for n in ast.walk(node):
+        if isinstance(n, ast.Attribute):
+            got.add(n.attr)
+    return got
+
+
+def _fused_names_of(cls: ast.ClassDef) -> tuple[set[str], ast.AST | None]:
+    """Names declared in fused_params, and the AST site declaring them."""
+    names: set[str] = set()
+    site: ast.AST | None = None
+
+    def collect(value: ast.AST, at: ast.AST):
+        nonlocal site
+        if isinstance(value, (ast.Tuple, ast.List, ast.Set)):
+            got = {
+                e.value for e in value.elts
+                if isinstance(e, ast.Constant) and isinstance(e.value, str)
+            }
+            if got:
+                names.update(got)
+                site = site or at
+
+    for node in ast.walk(cls):
+        if isinstance(node, ast.Assign):
+            for tgt in node.targets:
+                if (
+                    isinstance(tgt, ast.Name) and tgt.id == "fused_params"
+                ) or (
+                    isinstance(tgt, ast.Attribute)
+                    and tgt.attr == "fused_params"
+                ):
+                    collect(node.value, node)
+        elif isinstance(node, ast.AnnAssign) and node.value is not None:
+            tgt = node.target
+            if (
+                isinstance(tgt, ast.Name) and tgt.id == "fused_params"
+            ) or (
+                isinstance(tgt, ast.Attribute) and tgt.attr == "fused_params"
+            ):
+                collect(node.value, node)
+    return names, site
+
+
+class FusedContractRule(Rule):
+    id = "fused-contract"
+    description = (
+        "kernels declaring fused_params must define bind_fused; fused "
+        "scalars never appear in branch tests of traced methods"
+    )
+
+    def check_file(self, ctx):
+        host_funcs = set(ctx.options.get("host_functions", []))
+        out: list[Violation] = []
+        for node in ctx.tree.body:
+            if isinstance(node, ast.ClassDef):
+                out.extend(self._check_class(ctx, node, host_funcs))
+        return out
+
+    def _check_class(self, ctx, cls: ast.ClassDef, host_funcs):
+        fused, site = _fused_names_of(cls)
+        if not fused:
+            return
+        methods = {
+            n.name: n for n in cls.body if isinstance(n, ast.FunctionDef)
+        }
+        if "bind_fused" not in methods:
+            yield Violation(
+                self.id, ctx.path,
+                getattr(site, "lineno", cls.lineno),
+                getattr(site, "col_offset", cls.col_offset),
+                f"class {cls.name} declares fused_params "
+                f"{sorted(fused)} but defines no bind_fused(); the grid "
+                "runner cannot rebind fused axes under vmap",
+            )
+        for name, func in methods.items():
+            if name in host_funcs:
+                continue
+            yield from self._check_method(ctx, cls, func, fused)
+
+    def _check_method(self, ctx, cls, func: ast.FunctionDef, fused):
+        exempt = concrete_exempt_statements(func)
+
+        def walk(node: ast.AST, in_exempt: bool):
+            if isinstance(node, ast.stmt) and node in exempt:
+                in_exempt = True
+            if not in_exempt:
+                test = None
+                if isinstance(node, (ast.If, ast.While)):
+                    test = node.test
+                elif isinstance(node, ast.IfExp):
+                    test = node.test
+                if test is not None:
+                    hot = sorted(_mentions(test) & fused)
+                    if hot:
+                        yield Violation(
+                            self.id, ctx.path, node.lineno, node.col_offset,
+                            f"{cls.name}.{func.name} branches on fused "
+                            f"scalar(s) {', '.join(hot)}; fused params are "
+                            "batched tracers under vmap — use mask "
+                            "arithmetic (xp.where)",
+                        )
+            for child in ast.iter_child_nodes(node):
+                yield from walk(child, in_exempt)
+
+        for stmt in func.body:
+            yield from walk(stmt, False)
+
+
+register_rule(FusedContractRule())

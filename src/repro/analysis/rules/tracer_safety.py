@@ -1,0 +1,190 @@
+"""``tracer-safety`` — staged kernel bodies never branch on traced data.
+
+Under ``simulate_lockstep(..., backend="jax")`` every kernel ``step``
+and the gate's staged admission path run inside ``jax.jit`` +
+``lax.scan`` (and, grid-fused, under ``vmap``): state arrays, the
+per-round straggler row, the round index and any value derived from
+them are *tracers*.  Calling ``bool()``/``int()``/``float()`` on one,
+or using one as a Python ``if``/``while`` test, raises
+``TracerBoolConversionError`` at best — and at worst silently bakes one
+trace-time value into the compiled program.  The kernels' sanctioned
+escape hatches are lexical and this rule recognizes both
+(docs/scheme_kernels.md "Running on jax"):
+
+* concrete-only regions guarded by the backend ``concrete`` flag
+  (``if bk.concrete: ...`` subtrees; the block remainder after an
+  ``if not bk.concrete: return ...`` early guard);
+* identity tests against sentinels (``valid is False``,
+  ``pending is None``) — ``is`` never calls ``__bool__``.
+
+Mechanics: within functions named by ``staged_functions`` (config),
+parameters named by ``traced_params`` seed a taint set; taint
+propagates through simple assignments.  Findings are tainted
+``if``/``while``/ternary/``assert`` tests, ``bool/int/float()`` on
+tainted values, and ``.item()``/``.tolist()`` anywhere (those are
+host-sync by definition).  Names under shape metadata (``x.shape``,
+``x.ndim``, ``x.dtype``) are not tainted — shapes are static under
+tracing.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from ..astutil import (
+    concrete_exempt_statements,
+    func_param_names,
+    is_concrete_test,
+    is_identity_test,
+    names_in,
+)
+from ..engine import Rule, Violation, register_rule
+
+_HOST_SYNC_METHODS = ("item", "tolist")
+_CAST_FUNCS = ("bool", "int", "float")
+
+
+class TracerSafetyRule(Rule):
+    id = "tracer-safety"
+    description = (
+        "staged step/gate bodies must not branch on (or host-sync) "
+        "values reachable from traced data outside concrete-guarded "
+        "regions"
+    )
+
+    def check_file(self, ctx):
+        staged = set(ctx.options.get("staged_functions", []))
+        traced_params = set(ctx.options.get("traced_params", []))
+        out: list[Violation] = []
+        for node in ctx.tree.body:
+            self._visit(node, staged, traced_params, ctx, out, in_class=None)
+        return out
+
+    def _visit(self, node, staged, traced_params, ctx, out, in_class):
+        if isinstance(node, ast.ClassDef):
+            for child in node.body:
+                self._visit(child, staged, traced_params, ctx, out,
+                            in_class=node.name)
+            return
+        if isinstance(node, ast.FunctionDef) and node.name in staged:
+            out.extend(self._check_staged(ctx, node, traced_params))
+            return
+        for child in ast.iter_child_nodes(node):
+            self._visit(child, staged, traced_params, ctx, out, in_class)
+
+    # -- one staged function ---------------------------------------------
+    def _check_staged(self, ctx, func: ast.FunctionDef, traced_params):
+        tainted = {p for p in func_param_names(func) if p in traced_params}
+        tainted |= self._propagate(func, tainted)
+        exempt = concrete_exempt_statements(func)
+        out: list[Violation] = []
+
+        # statement -> is it inside an exempt region?
+        def check(node: ast.AST, in_exempt: bool):
+            if isinstance(node, ast.stmt) and node in exempt:
+                in_exempt = True
+            if not in_exempt:
+                out.extend(self._check_node(ctx, func, node, tainted))
+            if isinstance(node, ast.FunctionDef) and node is not func:
+                # nested closure (e.g. a lax.while_loop cond/body):
+                # its parameters are traced loop carries
+                inner = set(func_param_names(node)) | tainted
+                inner |= self._propagate(node, inner)
+                ex = concrete_exempt_statements(node)
+                for child in ast.iter_child_nodes(node):
+                    self._check_closure(ctx, node, child, inner, ex,
+                                        in_exempt, out)
+                return
+            for child in ast.iter_child_nodes(node):
+                check(child, in_exempt)
+
+        for stmt in func.body:
+            check(stmt, False)
+        return out
+
+    def _check_closure(self, ctx, func, node, tainted, exempt, in_exempt,
+                       out):
+        if isinstance(node, ast.stmt) and node in exempt:
+            in_exempt = True
+        if not in_exempt:
+            out.extend(self._check_node(ctx, func, node, tainted))
+        for child in ast.iter_child_nodes(node):
+            self._check_closure(ctx, func, child, tainted, exempt,
+                                in_exempt, out)
+
+    def _propagate(self, func: ast.FunctionDef, seed: set[str]) -> set[str]:
+        """Forward taint through simple assignments, to fixpoint."""
+        tainted = set(seed)
+        for _ in range(4):
+            grew = False
+            for node in ast.walk(func):
+                targets = []
+                value = None
+                if isinstance(node, ast.Assign):
+                    targets, value = node.targets, node.value
+                elif isinstance(node, (ast.AugAssign, ast.AnnAssign)):
+                    targets, value = [node.target], node.value
+                elif isinstance(node, ast.NamedExpr):
+                    targets, value = [node.target], node.value
+                if value is None:
+                    continue
+                if names_in(value) & tainted:
+                    for t in targets:
+                        for n in ast.walk(t):
+                            if isinstance(n, ast.Name) and n.id not in tainted:
+                                tainted.add(n.id)
+                                grew = True
+            if not grew:
+                break
+        return tainted
+
+    def _check_node(self, ctx, func, node, tainted):
+        test = None
+        what = None
+        if isinstance(node, (ast.If, ast.While)):
+            test, what = node.test, type(node).__name__.lower()
+        elif isinstance(node, ast.IfExp):
+            test, what = node.test, "conditional expression"
+        elif isinstance(node, ast.Assert):
+            test, what = node.test, "assert"
+        if test is not None:
+            if is_identity_test(test):
+                return
+            if is_concrete_test(test):
+                # `if bk.concrete and <traced>...`: the flag is a host
+                # bool and short-circuits before the traced operand is
+                # ever coerced — the sanctioned guard idiom
+                return
+            hot = sorted(names_in(test) & tainted)
+            if hot:
+                yield Violation(
+                    self.id, ctx.path, node.lineno, node.col_offset,
+                    f"`{what}` in staged `{func.name}` branches on "
+                    f"traced value(s) {', '.join(hot)}; use mask-select "
+                    "math or guard with the backend `concrete` flag",
+                )
+            return
+        if isinstance(node, ast.Call):
+            if (
+                isinstance(node.func, ast.Attribute)
+                and node.func.attr in _HOST_SYNC_METHODS
+            ):
+                yield Violation(
+                    self.id, ctx.path, node.lineno, node.col_offset,
+                    f".{node.func.attr}() in staged `{func.name}` "
+                    "host-syncs a traced value",
+                )
+                return
+            if (
+                isinstance(node.func, ast.Name)
+                and node.func.id in _CAST_FUNCS
+                and any(names_in(a) & tainted for a in node.args)
+            ):
+                yield Violation(
+                    self.id, ctx.path, node.lineno, node.col_offset,
+                    f"{node.func.id}() on a traced value in staged "
+                    f"`{func.name}` forces concretization",
+                )
+
+
+register_rule(TracerSafetyRule())

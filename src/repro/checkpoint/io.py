@@ -25,6 +25,7 @@ from __future__ import annotations
 
 import json
 import os
+import zipfile
 
 import jax
 import jax.numpy as jnp
@@ -123,16 +124,52 @@ def save_blob(path: str, obj) -> str:
 
 
 def load_blob(path: str):
-    """Inverse of :func:`save_blob` (tuples come back as lists)."""
+    """Inverse of :func:`save_blob` (tuples come back as lists).
+
+    A payload that is not a well-formed blob — truncated/garbled zip,
+    missing skeleton, broken skeleton JSON, or a skeleton referencing
+    an array member the archive lacks — raises ``ValueError`` naming
+    the file and what is wrong with it, never a bare
+    ``BadZipFile``/``KeyError`` from three layers down."""
     if not path.endswith(".npz"):
         path += ".npz"
-    with np.load(path, allow_pickle=False) as zf:
-        skeleton = json.loads(str(zf["__blob__"]))
+    try:
+        zf = np.load(path, allow_pickle=False)
+    except (zipfile.BadZipFile, ValueError, OSError) as exc:
+        # garbage bytes surface from np.load as BadZipFile OR as a bare
+        # ValueError (its .npy-fallback mistakes them for pickled data)
+        if isinstance(exc, FileNotFoundError):
+            raise
+        raise ValueError(
+            f"corrupted checkpoint blob {path!r}: not a readable npz "
+            f"archive ({exc})"
+        ) from exc
+    with zf:
+        try:
+            skeleton = json.loads(str(zf["__blob__"]))
+        except KeyError as exc:
+            raise ValueError(
+                f"corrupted checkpoint blob {path!r}: missing __blob__ "
+                "skeleton entry (not written by save_blob?)"
+            ) from exc
+        except (json.JSONDecodeError, zipfile.BadZipFile) as exc:
+            raise ValueError(
+                f"corrupted checkpoint blob {path!r}: unreadable "
+                f"skeleton ({exc})"
+            ) from exc
 
         def dec(o):
             if isinstance(o, dict):
                 if set(o) == {_BLOB_TAG}:
-                    return zf[o[_BLOB_TAG]]
+                    key = o[_BLOB_TAG]
+                    try:
+                        return zf[key]
+                    except (KeyError, zipfile.BadZipFile, ValueError) as exc:
+                        raise ValueError(
+                            f"corrupted checkpoint blob {path!r}: "
+                            f"skeleton references array {key!r} but the "
+                            f"archive cannot deliver it ({exc})"
+                        ) from exc
                 return {k: dec(v) for k, v in o.items()}
             if isinstance(o, list):
                 return [dec(v) for v in o]

@@ -272,7 +272,9 @@ try:  # pragma: no cover - exercised only where jax is installed
             return _jax.lax
 
     _REGISTRY["jax"] = _JaxBackend()
-except Exception:  # noqa: BLE001 - jax absent or broken: numpy-only
+except (ImportError, AttributeError, RuntimeError, OSError):
+    # jax absent or broken (missing shared libs, plugin init failure):
+    # the registry stays numpy-only
     pass
 
 _ACTIVE = "numpy"

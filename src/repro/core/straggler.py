@@ -193,7 +193,7 @@ def _window_stats(win, B: int):
     if xp is not np and win.shape[-1] >= PALLAS_WINDOW_MIN_N:
         try:
             from repro.kernels.gate_window.ops import window_stats
-        except Exception:  # pragma: no cover - kernels pkg unavailable
+        except ImportError:  # pragma: no cover - kernels pkg unavailable
             window_stats = None
         if window_stats is not None:
             return window_stats(win, B)
@@ -225,7 +225,7 @@ def _buffer_stats(buf, B: int):
     if xp is not np and kh and buf.shape[-1] >= PALLAS_WINDOW_MIN_N:
         try:
             from repro.kernels.gate_window.ops import buffer_stats
-        except Exception:  # pragma: no cover - kernels pkg unavailable
+        except ImportError:  # pragma: no cover - kernels pkg unavailable
             buffer_stats = None
         if buffer_stats is not None:
             return buffer_stats(buf, B)

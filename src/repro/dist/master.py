@@ -753,6 +753,7 @@ class _MasterLoop:
         rec.effective_row = erow
         rec.waited = [int(surv[w]) for w in waited]
         rec.deaths = [ev["worker"] for ev in self.ledger.events
+                      # repro: allow[protocol-exhaustiveness]: ledger-event query, not a wire handler — "death" events are appended locally by mark_dead, never sent
                       if ev.get("round") == g and ev["kind"] == "death"]
         rec.duration_s = duration
         rec.analytic_s = _analytic_duration(
@@ -822,6 +823,7 @@ class _MasterLoop:
             )
         except HarnessError:
             raise
+        # repro: allow[blanket-except]: degradation boundary — any epoch-rebuild failure (scheme construction, partition math) must surface as one HarnessError, not a raw traceback mid-teardown
         except Exception as exc:
             raise HarnessError(
                 f"round {g}: degradation to n={len(survivors)} failed: "

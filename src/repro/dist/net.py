@@ -42,6 +42,7 @@ feeds.
 
 from __future__ import annotations
 
+import io
 import pickle
 import socket
 import struct
@@ -59,7 +60,73 @@ HELLO_KIND = "__hello__"
 
 
 class FrameError(ValueError):
-    """Corrupted stream: bad magic, oversized length, or CRC mismatch."""
+    """Corrupted stream: bad magic, oversized length, CRC mismatch, or
+    an undecodable / forbidden payload."""
+
+
+#: builtins a wire payload may name — plain data constructors only.
+_SAFE_BUILTINS = frozenset({
+    "bool", "int", "float", "complex", "str", "bytes", "bytearray",
+    "list", "tuple", "dict", "set", "frozenset", "slice", "range",
+})
+
+#: numpy's array/scalar pickle-reconstruction entry points moved from
+#: ``numpy.core`` to ``numpy._core`` in numpy 2.x; accept both so a
+#: frame encoded by either generation decodes.
+_NUMPY_RECON_MODULES = frozenset({
+    "numpy.core.multiarray", "numpy._core.multiarray",
+})
+
+_NUMPY_SCALARS = frozenset({
+    "bool_", "int8", "int16", "int32", "int64", "intp",
+    "uint8", "uint16", "uint32", "uint64", "uintp",
+    "float16", "float32", "float64", "longdouble",
+    "complex64", "complex128", "clongdouble",
+    "datetime64", "timedelta64", "str_", "bytes_",
+})
+
+
+class _RestrictedUnpickler(pickle.Unpickler):
+    """Unpickler whose ``find_class`` allowlists plain-data builtins and
+    numpy array/scalar reconstruction — nothing else.  A TCP frame is a
+    trust boundary: a payload naming any other global (``os.system``,
+    ``subprocess.*``, arbitrary ``__reduce__`` gadgets) raises
+    :class:`FrameError` before any constructor runs."""
+
+    def find_class(self, module: str, name: str):
+        if module == "builtins" and name in _SAFE_BUILTINS:
+            return super().find_class(module, name)
+        if module in _NUMPY_RECON_MODULES and name in (
+            "_reconstruct", "scalar",
+        ):
+            return super().find_class(module, name)
+        if module == "numpy" and (
+            name in ("ndarray", "dtype") or name in _NUMPY_SCALARS
+        ):
+            return super().find_class(module, name)
+        if module == "numpy.dtypes" and name.endswith("DType"):
+            return super().find_class(module, name)
+        raise FrameError(
+            f"wire payload references forbidden global {module}.{name}"
+        )
+
+
+def safe_loads(payload: bytes):
+    """Deserialize one wire payload through the restricted unpickler.
+
+    Every failure mode — forbidden global, truncated pickle stream,
+    structurally bogus opcodes — surfaces as :class:`FrameError`, the
+    same class the framing layer raises, so callers have exactly one
+    "this peer is speaking garbage" path (drop the socket, let the
+    reconnect/partition machinery take over)."""
+    try:
+        return _RestrictedUnpickler(io.BytesIO(payload)).load()
+    except FrameError:
+        raise
+    except (pickle.UnpicklingError, EOFError, AttributeError, ImportError,
+            IndexError, KeyError, MemoryError, TypeError, ValueError,
+            struct.error) as exc:
+        raise FrameError(f"undecodable wire payload: {exc!r}") from exc
 
 
 def frame_crc(payload: bytes, mid: int, ts: float) -> int:
@@ -263,8 +330,13 @@ class NetConnection:
         for payload, mid, ts in frames:
             if not self._filter.accept(mid):
                 continue
+            try:
+                msg = safe_loads(payload)
+            except FrameError:
+                self._drop_socket()      # hostile/garbled payload: same
+                return False             # path as a framing loss
             self.last_wire_lag = now - ts
-            self._inbox.append(pickle.loads(payload))
+            self._inbox.append(msg)
         return bool(self._inbox)
 
     # -- mp.Connection surface -------------------------------------------
@@ -457,7 +529,12 @@ class TcpWorkerLink:
             sock = self._sock
             preload, self._preload = self._preload, []
         for payload, mid, ts in preload:
-            self._intake(pickle.loads(payload), mid, ts)
+            try:
+                msg = safe_loads(payload)
+            except FrameError:
+                self._detach()           # poisoned handshake backlog
+                return
+            self._intake(msg, mid, ts)
         if sock is not None:
             while True:
                 try:
@@ -478,11 +555,11 @@ class TcpWorkerLink:
                     break
                 try:
                     frames = self._decoder.feed(data)
+                    for payload, mid, ts in frames:
+                        self._intake(safe_loads(payload), mid, ts)
                 except FrameError:
-                    self._detach()       # framing lost: await reconnect
-                    break
-                for payload, mid, ts in frames:
-                    self._intake(pickle.loads(payload), mid, ts)
+                    self._detach()       # framing/payload lost: await
+                    break                # reconnect
         # a healed partition flushes the held frames in order, like a
         # backed-up TCP buffer finally delivering
         if self._held and not self._partition_active(time.perf_counter()):
@@ -598,7 +675,7 @@ class TcpHost:
                 raise EOFError("peer closed during handshake")
             frames = decoder.feed(data)
         payload, _mid, _ts = frames[0]
-        hello = pickle.loads(payload)
+        hello = safe_loads(payload)
         if hello.get("kind") != HELLO_KIND:
             raise ValueError(f"expected hello, got {hello.get('kind')!r}")
         wid = int(hello["worker"])

@@ -181,12 +181,12 @@ def run_pair(arch: str, shape_name: str, *, multi_pod: bool = False,
         return record
 
     mesh = make_production_mesh(multi_pod=multi_pod)
-    t0 = time.time()
+    t0 = time.perf_counter()
     lowered = lower_pair(cfg, shape_name, mesh, coded=coded,
                          profile=profile, cache_mode=cache_mode)
-    t1 = time.time()
+    t1 = time.perf_counter()
     compiled = lowered.compile()
-    t2 = time.time()
+    t2 = time.perf_counter()
 
     ma = compiled.memory_analysis()
     ca = compiled.cost_analysis() or {}

@@ -44,18 +44,18 @@ def main() -> None:
     # prefill the prompt, then batched greedy decode
     from repro.models import prefill
 
-    t0 = time.time()
+    t0 = time.perf_counter()
     logits, cache = prefill(
         params, cfg, {"tokens": prompt}, max_seq=args.max_seq
     )
-    t_pre = time.time() - t0
+    t_pre = time.perf_counter() - t0
     token = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
     out_tokens = [token]
     for i in range(args.tokens - 1):
         logits, cache = step(params, cache, token, jnp.int32(prompt_len + i))
         token = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
         out_tokens.append(token)
-    dt = time.time() - t0
+    dt = time.perf_counter() - t0
     seqs = np.concatenate([np.asarray(t) for t in out_tokens], axis=1)
     print(f"prefill {prompt_len} tokens in {t_pre:.2f}s; decoded "
           f"{args.tokens} x {args.batch} seqs in {dt:.2f}s "

@@ -48,9 +48,9 @@ def run_demo(scheme_name: str, jobs: int, n: int, models: int, seed: int):
         scheme=sch, num_models=models, batch_size=256, lr=5e-3, seed=seed
     )
     delays = GilbertElliotSource(n=n, seed=seed).sample_delays(jobs + sch.T + 1)
-    t0 = time.time()
+    t0 = time.perf_counter()
     clock = drv.run(jobs, delays)
-    wall = time.time() - t0
+    wall = time.perf_counter() - t0
     final = [drv.losses[m][-1] for m in range(models)]
     print(
         f"scheme={scheme_name:8s} load={sch.normalized_load:.4f} T={sch.T} "

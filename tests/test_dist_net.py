@@ -229,3 +229,109 @@ def test_supervisor_classifies_unreachable_alive_as_partitioned():
     finally:
         sup.stop()
         host.close()
+
+
+class TestRestrictedUnpickler:
+    """The wire deserializes through ``safe_loads`` only: a frame is a
+    trust boundary, and a payload naming any global outside the
+    builtins + numpy allowlist must die as :class:`FrameError` before
+    any constructor runs (docs/fault_tolerance.md, "Network transport
+    & partitions")."""
+
+    def test_protocol_messages_roundtrip(self):
+        from repro.dist.net import safe_loads
+        import pickle
+
+        msgs = [
+            {"kind": "round", "t": 3, "attempt": 0,
+             "payload": np.arange(12.0).reshape(3, 4)},
+            {"kind": "result", "worker": 1, "grad": np.float64(0.5),
+             "mask": np.array([True, False])},
+            {"kind": "__hello__", "worker": 0, "incarnation": 2},
+            {"kind": "pong", "seq": None, "extras": [1, 2.5, "s", (7,)]},
+        ]
+        for msg in msgs:
+            back = safe_loads(pickle.dumps(msg))
+            assert set(back) == set(msg)
+            for key, ref in msg.items():
+                got = back[key]
+                if isinstance(ref, np.ndarray):
+                    assert got.dtype == ref.dtype
+                    np.testing.assert_array_equal(got, ref)
+                elif isinstance(ref, tuple):
+                    assert tuple(got) == ref
+                else:
+                    assert got == ref
+
+    def test_forbidden_global_raises_frameerror(self):
+        from repro.dist.net import FrameError, safe_loads
+        import pickle
+
+        class Gadget:
+            def __reduce__(self):
+                import os
+                return (os.system, ("true",))
+
+        payload = pickle.dumps({"kind": "round", "x": Gadget()})
+        with pytest.raises(FrameError, match="forbidden global"):
+            safe_loads(payload)
+
+    def test_arbitrary_class_lookup_raises_frameerror(self):
+        from repro.dist.net import FrameError, safe_loads
+        import pickle
+
+        payload = pickle.dumps(NetConnection.__new__ and time.sleep)
+        with pytest.raises(FrameError, match="forbidden global"):
+            safe_loads(payload)
+
+    def test_truncated_payload_raises_frameerror(self):
+        from repro.dist.net import FrameError, safe_loads
+        import pickle
+
+        payload = pickle.dumps({"kind": "ready", "worker": 3})
+        with pytest.raises(FrameError):
+            safe_loads(payload[: len(payload) // 2])
+
+    def test_hostile_frame_drops_connection_not_process(self):
+        """End-to-end: a well-framed but forbidden payload injected at
+        a live host socket must not crash anything — the receiver drops
+        the socket and the link reports unreachable, the same state a
+        partition produces."""
+        import pickle
+        import socket as socketlib
+
+        from repro.dist.net import HELLO_KIND, TcpWorkerLink, encode_frame
+
+        host = TcpHost()
+        link = TcpWorkerLink(0)
+        host.register(link)
+        try:
+            sock = socketlib.create_connection(host.addr)
+            hello = pickle.dumps(
+                {"kind": HELLO_KIND, "worker": 0, "incarnation": 0}
+            )
+            sock.sendall(encode_frame(hello, 1, 0.0))
+            deadline = time.perf_counter() + 10.0
+            while link.waitable() is None:
+                assert time.perf_counter() < deadline
+                time.sleep(0.01)
+
+            class Evil:
+                def __reduce__(self):
+                    import os
+                    return (os.system, ("true",))
+
+            sock.sendall(encode_frame(pickle.dumps(Evil()), 2, 0.0))
+            deadline = time.perf_counter() + 10.0
+            while link.try_recv() is None:
+                if link.waitable() is None:   # socket dropped: contained
+                    break
+                assert time.perf_counter() < deadline
+                time.sleep(0.01)
+            assert link.waitable() is None
+        finally:
+            try:
+                sock.close()
+            except OSError:
+                pass
+            host.close()
